@@ -1,0 +1,88 @@
+"""Shared benchmark machinery: the four paper-analogue datasets, timing,
+CSV output.
+
+The paper evaluates NETFLIX (L1/L2 over rating vectors), SIFT (L1/L2 over
+image descriptors), AOL (edit distance over query strings) and PUBMED
+(Jaccard over abstracts). Those corpora aren't shippable; each is mirrored
+by a synthetic generator with the same *statistical* stress: clustered
+ratings, heavy-tailed descriptors, near-duplicate query strings, and
+shingled documents. Sizes are CPU-scaled; every number the harness emits is
+a ratio/count comparison, which is what the paper's figures assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.data import synthetic, vectorize
+
+OUT_DIR = os.environ.get("BENCH_OUT", "runs")
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    data: np.ndarray  # vectors handed to the join
+    metric: str
+    deltas: tuple[float, ...]  # evaluated thresholds (paper sweeps these)
+
+
+def make_datasets(n: int = 1500, seed: int = 0) -> list[Dataset]:
+    nf = synthetic.mixture(n, 20, n_clusters=6, spread=6.0, skew=0.3, seed=seed)
+    sift = synthetic.heavy_tailed(n, 32, alpha=2.5, seed=seed + 1)
+
+    strs = synthetic.strings(n, mutate=0.12, seed=seed + 2)
+    aol = vectorize.qgram_profile(strs, q=2, dim=64)
+
+    docs = synthetic.strings(n, length=(24, 60), mutate=0.08, seed=seed + 3)
+    pubmed = vectorize.minhash(vectorize.shingle_sets(docs, q=3), k=64).astype(
+        np.float32
+    )
+
+    def q(data, metric, qs=(0.003, 0.01)):
+        from repro.core import distances
+        import jax.numpy as jnp
+
+        sub = data[:400]
+        d = np.asarray(distances.pairwise(jnp.asarray(sub), jnp.asarray(sub), metric))
+        iu = np.triu_indices(len(sub), 1)
+        return tuple(float(np.quantile(d[iu], x)) for x in qs)
+
+    return [
+        Dataset("netflix-like", nf, "l1", q(nf, "l1")),
+        Dataset("sift-like", sift, "l2", q(sift, "l2")),
+        Dataset("aol-like", aol, "l1", q(aol, "l1")),
+        Dataset("pubmed-like", pubmed, "jaccard_minhash", q(pubmed, "jaccard_minhash")),
+    ]
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+class Csv:
+    def __init__(self, name: str, header: list[str]):
+        os.makedirs(OUT_DIR, exist_ok=True)
+        self.path = os.path.join(OUT_DIR, name)
+        self.f = open(self.path, "w")
+        self.header = header
+        self.f.write(",".join(header) + "\n")
+        print(",".join(header))
+
+    def row(self, *vals):
+        line = ",".join(str(v) for v in vals)
+        self.f.write(line + "\n")
+        self.f.flush()
+        print(line)
+
+    def close(self):
+        self.f.close()

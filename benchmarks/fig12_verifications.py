@@ -1,0 +1,30 @@
+"""Fig. 12: number of verifications per technique combo.
+
+Paper claims: Random+Iter worst; Gen+Learn best; ordering consistent with
+Fig. 6 join times (verifications are the machine-independent cost)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, make_datasets
+from repro.core import spjoin
+
+ARMS = [("random", "iterative"), ("distribution", "iterative"),
+        ("generative", "iterative"), ("generative", "learning")]
+
+
+def run(n: int = 1200, k: int = 256, p: int = 12) -> None:
+    csv = Csv("bench_fig12.csv",
+              ["dataset", "delta", "arm", "verifications", "inner", "outer"])
+    for ds in make_datasets(n):
+        delta = ds.deltas[-1]
+        for sampler, part in ARMS:
+            cfg = spjoin.JoinConfig(delta=delta, metric=ds.metric,
+                                    sampler=sampler, partitioner=part,
+                                    k=k, p=p, n_dims=8, seed=0)
+            res = spjoin.join(ds.data, cfg)
+            csv.row(ds.name, round(delta, 4), f"{sampler}+{part}",
+                    res.n_verifications, int(res.cost.inner), int(res.cost.outer))
+    csv.close()
+
+
+if __name__ == "__main__":
+    run()

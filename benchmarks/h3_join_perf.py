@@ -1,0 +1,81 @@
+"""Hillclimb H3 (§Perf): the distributed SP-Join pipeline itself.
+
+Measures, on an 8-device host mesh (real wall clock — this is the one
+hillclimb target that executes rather than dry-runs):
+  - per-arm wall time of the verify stage (compiled, after warmup),
+  - total shuffle (all_to_all) bytes parsed from the compiled stage,
+  - verification counts and capacity padding.
+
+Arms:
+  base          exact-fit capacity, no tighten, Pallas-interpret verify off
+                (jnp path — interpret mode is a Python-loop emulator on CPU;
+                the Pallas path is the TPU target, not the CPU fast path)
+  tighten       + distributed MBB tightening of whole boxes (H3-it1)
+  p-sweep       partitions per device 1/2/4 (H3-it2 — padding vs locality)
+
+Run inside a subprocess (needs the 8-device flag before jax init):
+    PYTHONPATH=src python -m benchmarks.h3_join_perf
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+from benchmarks.common import Csv
+
+_SUB = """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import json, time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import distributed
+from repro.data import synthetic
+from repro.launch import hloparse
+
+mesh = jax.make_mesh((8,), ("data",))
+data = synthetic.mixture({n}, 12, n_clusters=6, skew=0.5, seed=0)
+out = []
+for (label, tighten, p) in {arms}:
+    walls = []
+    for rep in range(2):  # rep 0 warms compile caches; rep 1 is steady state
+        t0 = time.perf_counter()
+        r = distributed.distributed_join(
+            jnp.asarray(data), mesh=mesh, delta={delta}, metric="l1", k=256,
+            p=p, n_dims=6, sampler="generative", use_kernel=False,
+            tighten=tighten, seed=0)
+        walls.append(time.perf_counter() - t0)
+    out.append(dict(label=label, p=p, wall_cold_s=walls[0], wall_s=walls[-1],
+                    hits=r.n_hits,
+                    verif=r.n_verifications, cap_w=r.exact_cap_w,
+                    padding=r.capacity_padding,
+                    max_cell=float(np.max(r.per_cell_verified))))
+print(json.dumps(out))
+"""
+
+
+def run(n: int = 4000, delta: float = 6.0) -> None:
+    arms = [("base", False, 16), ("tighten", True, 16),
+            ("tighten_p8", True, 8), ("tighten_p32", True, 32)]
+    prog = _SUB.format(n=n, delta=delta, arms=repr(arms))
+    res = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd=".",
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    rows = json.loads(res.stdout.splitlines()[-1])
+    csv = Csv("bench_h3.csv",
+              ["arm", "p", "wall_warm_s", "wall_cold_s", "hits",
+               "verifications", "cap_w", "padding", "max_cell"])
+    for r in rows:
+        csv.row(r["label"], r["p"], round(r["wall_s"], 2),
+                round(r["wall_cold_s"], 2), r["hits"],
+                r["verif"], r["cap_w"], round(r["padding"], 2),
+                int(r["max_cell"]))
+    csv.close()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""§Roofline: render the dry-run JSONL into the per-(arch x shape x mesh)
+three-term table (compute / memory / collective seconds, bottleneck,
+MODEL_FLOPS ratio, roofline-bound MFU). Source of truth for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Csv
+
+DRYRUN = os.environ.get("DRYRUN_JSONL", "runs/dryrun.jsonl")
+
+
+def load(path: str = DRYRUN) -> list[dict]:
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    best: dict[tuple, dict] = {}
+    for line in open(path):
+        r = json.loads(line)
+        if "roofline" in r:
+            best[(r["arch"], r["shape"], r["mesh"])] = r  # newest wins
+    return list(best.values())
+
+
+def run() -> None:
+    recs = load()
+    csv = Csv(
+        "bench_roofline.csv",
+        ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+         "bottleneck", "model_flops", "useful_ratio", "mfu_bound", "peak_gb"],
+    )
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        peak = (r.get("memory") or {}).get("peak_bytes") or 0
+        csv.row(
+            r["arch"], r["shape"], r["mesh"],
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}", t["bottleneck"],
+            f"{r.get('model_flops', 0):.3e}",
+            f"{(r.get('useful_flops_ratio') or 0):.3f}",
+            f"{(r.get('mfu_bound') or 0):.4f}",
+            f"{peak / 1e9:.2f}",
+        )
+    csv.close()
+    if not recs:
+        print("no dry-run records found; run: python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Distributed SP-Join on a simulated 8-device mesh — the production path:
+per-node stats, parameter broadcast, replicated Gibbs, capacity-bounded
+all_to_all dispatch, Pallas-blocked verification.
+
+    PYTHONPATH=src python examples/distributed_join.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed, spjoin
+from repro.data import synthetic
+
+mesh = jax.make_mesh((8,), ("data",))
+print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+data = synthetic.mixture(n=4000, m=12, n_clusters=6, skew=0.4, seed=0)
+
+res = distributed.distributed_join(
+    jnp.asarray(data), mesh=mesh, delta=6.0, metric="l1",
+    k=384, p=16, n_dims=6, sampler="generative", emit_pairs=True, seed=0,
+)
+print(f"pairs found:        {res.pairs.shape[0]}")
+print(f"verifications:      {res.n_verifications}")
+print(f"dispatch overflow:  {res.overflow} (exact-fit capacity planning)")
+print(f"capacity padding:   {res.capacity_padding:.2f}x "
+      "(the TPU-native skew metric — lower = better pivots)")
+print(f"node confidences:   {res.node_confidences.round(3)}")
+print(f"gibbs accept rate:  {res.accept_rate:.2f}")
+
+truth = spjoin.brute_force_pairs(data, 6.0, "l1")
+assert np.array_equal(res.pairs, truth)
+print("exactness check vs brute force: OK")

@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + streaming decode with KV/SSM state.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
+
+(Equivalent to: python -m repro.launch.serve --arch <a> --reduced ...)
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "qwen1.5-0.5b"]) + [
+    "--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "24",
+]
+from repro.launch.serve import main
+
+main()

@@ -1,0 +1,17 @@
+"""Train a reduced-config LM end-to-end with the production driver —
+checkpointing, deterministic data, resumable. Any of the 10 assigned
+architectures via --arch.
+
+    PYTHONPATH=src python examples/train_lm.py --arch xlstm-1.3b --steps 60
+
+(Equivalent to: python -m repro.launch.train --arch <a> --reduced ...)
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "qwen1.5-0.5b"]) + [
+    "--reduced", "--steps", "60", "--ckpt-dir", "runs/example_ckpt",
+    "--ckpt-every", "30", "--log-every", "10",
+]
+from repro.launch.train import main
+
+main()

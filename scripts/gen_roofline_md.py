@@ -1,0 +1,32 @@
+"""Render dry-run JSONL(s) into the EXPERIMENTS.md roofline tables."""
+import json, sys
+
+def load(path):
+    best = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            if "roofline" in r:
+                best[(r["arch"], r["shape"], r["mesh"])] = r
+    except FileNotFoundError:
+        pass
+    return best
+
+def fmt(r):
+    t = r["roofline"]
+    peak = (r.get("memory") or {}).get("temp_bytes") or 0
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh'].replace('_pod','')} "
+            f"| {t['compute_s']*1e3:9.1f} | {t['memory_s']*1e3:9.1f} | {t['collective_s']*1e3:9.1f} "
+            f"| {t['bottleneck'][:-2]} | {r.get('useful_flops_ratio') or 0:.2f} "
+            f"| {(r.get('mfu_bound') or 0):.4f} | {peak/1e9:.1f} |")
+
+def table(recs):
+    out = ["| arch | shape | mesh | compute ms | memory ms | collective ms | bottleneck | useful | mfu_bound | temp GB |",
+           "|---|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for k in sorted(recs):
+        out.append(fmt(recs[k]))
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
+    print(table(load(which)))

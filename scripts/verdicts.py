@@ -1,0 +1,107 @@
+"""Summarize paper-claim verdicts from the benchmark CSVs (fills the
+§Validation verdict lines in EXPERIMENTS.md)."""
+import csv
+import os
+from collections import defaultdict
+
+R = "runs"
+
+
+def rows(name):
+    path = os.path.join(R, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def fig6():
+    by = defaultdict(dict)
+    for r in rows("bench_fig6.csv"):
+        by[(r["dataset"], r["delta"])][(r["sampler"], r["partitioner"])] = r
+    wins_v, total = 0, 0
+    for key, arms in by.items():
+        rand = min(int(arms[(s, p)]["verifications"])
+                   for (s, p) in arms if s == "random")
+        best_ours = min(int(arms[(s, p)]["verifications"])
+                        for (s, p) in arms if s != "random")
+        total += 1
+        wins_v += best_ours <= rand
+    print(f"fig6: best(Dist/Gen) <= best(Random) verifications in {wins_v}/{total} settings")
+    # gen+learn vs random+iter
+    imp = []
+    for key, arms in by.items():
+        a = int(arms[("generative", "learning")]["verifications"])
+        b = int(arms[("random", "iterative")]["verifications"])
+        imp.append(b / max(a, 1))
+    print(f"fig6: Gen+Learn vs Random+Iter verification ratio: "
+          f"median {sorted(imp)[len(imp)//2]:.2f}x, max {max(imp):.2f}x")
+
+
+def fig7():
+    by = defaultdict(dict)
+    for r in rows("bench_fig7.csv"):
+        by[r["dataset"]][r["arm"]] = r
+    for ds, arms in by.items():
+        m1 = float(arms["random_1x"]["map_s"])
+        m10 = float(arms["random_10x"]["map_s"])
+        g = float(arms["gen_1x"]["join_s"])
+        r10 = float(arms["random_10x"]["join_s"])
+        print(f"fig7 {ds}: map_s 1x->10x = {m1:.2f}->{m10:.2f} "
+              f"({m10/max(m1,1e-9):.1f}x); gen_1x join {g:.1f}s vs random_10x {r10:.1f}s")
+
+
+def fig8():
+    by = defaultdict(list)
+    for r in rows("bench_fig8.csv"):
+        by[r["dataset"]].append(r)
+    for ds, rs in by.items():
+        js = [float(r["join_s"]) for r in rs]
+        mc = [int(r["max_cell"]) for r in rs]
+        print(f"fig8 {ds}: join_s spread {min(js):.1f}-{max(js):.1f} "
+              f"({(max(js)-min(js))/min(js):.0%}); max_cell {min(mc)}-{max(mc)}")
+
+
+def fig9():
+    by = defaultdict(dict)
+    for r in rows("bench_fig9.csv"):
+        by[(r["dataset"], r["delta"])][r["system"]] = r
+    wins = 0
+    for key, arms in by.items():
+        sp = int(arms["spjoin"]["verifications"])
+        others = min(int(arms[s]["verifications"]) for s in arms if s != "spjoin")
+        wins += sp <= others
+    print(f"fig9: spjoin fewest verifications in {wins}/{len(by)} settings")
+
+
+def fig11():
+    by = defaultdict(list)
+    for r in rows("bench_fig11.csv"):
+        by[r["dataset"]].append(r)
+    for ds, rs in by.items():
+        rs.sort(key=lambda r: float(r["fraction"]))
+        v = [int(r["verifications"]) for r in rs]
+        print(f"fig11 {ds}: verifications at 25/50/75/100% = {v} "
+              f"(100%/25% = {v[-1]/max(v[0],1):.1f}x; linear would be 4x, "
+              f"quadratic 16x)")
+
+
+def table3():
+    by = defaultdict(dict)
+    for r in rows("bench_table3.csv"):
+        by[r["dataset"]][r["system"]] = r
+    wins = 0
+    for ds, arms in by.items():
+        gl = int(arms["gen+learn"]["stdev"])
+        others = min(int(arms[s]["stdev"]) for s in arms if s != "gen+learn")
+        wins += gl <= others
+        print(f"table3 {ds}: gen+learn stdev {gl} vs best-other {others}")
+    print(f"table3: gen+learn lowest stdev in {wins}/{len(by)} datasets")
+
+
+if __name__ == "__main__":
+    for fn in (fig6, fig7, fig8, fig9, fig11, table3):
+        try:
+            fn()
+        except Exception as e:
+            print(f"{fn.__name__}: (pending) {e}")

@@ -1,0 +1,13 @@
+"""repro: SP-Join (error-bounded sampling similarity join) as a JAX/TPU framework.
+
+Top-level namespaces:
+  repro.core     — the paper's contribution (sampling, partitioning, distributed join)
+  repro.kernels  — Pallas TPU kernels for the verify hot-spot (+ jnp oracles)
+  repro.models   — the 10 assigned LM architectures (dense/GQA/MoE/SSM/hybrid)
+  repro.data     — deterministic sharded data pipeline w/ SP-Join dedup stage
+  repro.train    — optimizer / checkpointing / train-step builders
+  repro.configs  — per-architecture configs
+  repro.launch   — mesh construction, multi-pod dry-run, drivers
+"""
+
+__version__ = "0.1.0"

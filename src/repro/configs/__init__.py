@@ -1,0 +1,118 @@
+"""Architecture registry + input specs for every (arch x shape) cell.
+
+``get(name)`` / ``get_reduced(name)`` return ArchConfig; ``input_specs``
+builds the exact inputs each entry point takes — as ShapeDtypeStructs
+(dry-run: zero allocation) or concrete arrays (smoke tests / examples).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig, shape_applicable
+
+ARCH_MODULES = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "stablelm-3b": "stablelm_3b",
+    "granite-34b": "granite_34b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "qwen1.5-0.5b": "qwen1p5_0p5b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "llava-next-34b": "llava_next_34b",
+}
+ARCH_NAMES = tuple(ARCH_MODULES)
+
+
+def _module(name: str):
+    try:
+        return importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(ARCH_MODULES)}") from None
+
+
+def get(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return _module(name).reduced()
+
+
+def _token_specs(cfg: ArchConfig, shape: ShapeConfig, abstract: bool, kind: str):
+    B, S = shape.global_batch, shape.seq_len
+
+    def arr(shp, dtype, high=None):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        if dtype == jnp.int32:
+            return jnp.asarray(
+                np.random.default_rng(0).integers(0, high or cfg.vocab, shp), jnp.int32
+            )
+        return jnp.zeros(shp, dtype)
+
+    if cfg.family == "audio":
+        batch = {"frames": arr((B, S, cfg.frontend_dim), jnp.bfloat16)}
+        labels = arr((B, S), jnp.int32)
+    elif cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        assert s_text > 0, (S, cfg.n_patches)
+        batch = {
+            "patches": arr((B, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": arr((B, s_text), jnp.int32),
+        }
+        labels = arr((B, S), jnp.int32)  # full-sequence labels, patch part masked
+    else:
+        batch = {"tokens": arr((B, S), jnp.int32)}
+        labels = arr((B, S), jnp.int32)
+    if kind == "train":
+        batch["labels"] = labels
+    return batch
+
+
+def input_specs(
+    cfg: ArchConfig, shape: ShapeConfig, *, abstract: bool = True
+) -> dict[str, Any]:
+    """Inputs for the entry point the shape exercises.
+
+    train/prefill -> {"batch": {...}}           (forward / train_step)
+    decode        -> {"token","state","length"} (serve_step: one new token
+                     against a KV/SSM state already holding seq_len tokens)
+    """
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name} skipped: {why}")
+    if not shape.is_decode:
+        return {"batch": _token_specs(cfg, shape, abstract, shape.kind)}
+
+    B, S = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(lambda: transformer.init_state(cfg, B, S))
+    if not abstract:
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), state)
+    token = (
+        jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        if abstract
+        else jnp.zeros((B, 1), jnp.int32)
+    )
+    length = (
+        jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.asarray(S - 1, jnp.int32)
+    )
+    return {"token": token, "state": state, "length": length}
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """Every (arch, shape) pair with (runnable, skip_reason)."""
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out

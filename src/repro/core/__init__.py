@@ -1,0 +1,15 @@
+"""Core SP-Join algorithms (paper: Wu et al., 2019).
+
+Modules map 1:1 onto the paper's sections:
+  distances    — Def. 1/2 metric-space distances
+  expfam       — §3.3 exponential-family MLE (Lemma 1)
+  gof          — §3.4 chi-square goodness-of-fit confidence (Lemma 2, Thm 1, Eq. 10)
+  sampling     — §4 distribution-aware (Alg. 2) + generative Gibbs (Alg. 3/4),
+                 Eq. 11 allocation, Thm 2/3 bounds
+  mapping      — §5.2 space mapping via anchor pivots (Lemma 4)
+  partition    — §5.2 iterative (Alg. 5) + §5.3 learning-based (Alg. 6) partitioning
+  cost_model   — §5.1 cost model G(A) (Eq. 28/33) and capacity prediction
+  spjoin       — single-host end-to-end reference executor
+  distributed  — shard_map multi-device 3-phase join (TPU-native adaptation)
+  baselines    — ball-partition (MRSimJoin-like) + KPM-like baselines
+"""

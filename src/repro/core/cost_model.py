@@ -1,0 +1,103 @@
+"""Partition cost model (paper §5.1, Eqs. 28/33) + capacity prediction.
+
+The paper's cost G(A) = 𝟙ᵀ·A·Aᵀ·𝟙 counts pairwise co-residencies; rewritten
+over KERNEL/WHOLE partitions (Eq. 33):
+
+    G = Σ_h |V_h|²                      (inner verification cost)
+      + Σ_h |V_h| · (|W_h| − |V_h|)     (outer verification cost)
+
+Minimizing G under the correctness constraint A·Aᵀ ≥ B is NP-hard (Theorem 4),
+hence the two heuristics in repro.core.partition.
+
+TPU adaptation: on a static-shape machine, skew doesn't cost straggler time —
+it costs *capacity padding* in the all_to_all dispatch. This module converts
+sample-based partition-size estimates into the static per-cell capacity the
+distributed executor compiles with, and exposes the skew/balance metrics that
+EXPERIMENTS.md reports (Table 3 and Fig. 12 analogues).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCost:
+    inner: float  # Σ |V_h|²
+    outer: float  # Σ |V_h|·(|W_h|−|V_h|)
+    total: float  # G(A)
+    max_cell: float  # max_h |V_h|·|W_h| — the "last reducer" load
+    balance_std: float  # std of per-cell verification counts (Table 3 metric)
+    duplication: float  # Σ|W_h| / N — shuffle volume amplification
+
+
+def partition_cost(v_sizes: np.ndarray, w_sizes: np.ndarray) -> PartitionCost:
+    """Evaluate Eq. 33 given per-cell |V_h| and |W_h|."""
+    v = np.asarray(v_sizes, np.float64)
+    w = np.asarray(w_sizes, np.float64)
+    inner = float((v * v).sum())
+    outer = float((v * np.maximum(w - v, 0.0)).sum())
+    per_cell = v * w
+    n = max(v.sum(), 1.0)
+    return PartitionCost(
+        inner=inner,
+        outer=outer,
+        total=inner + outer,
+        max_cell=float(per_cell.max(initial=0.0)),
+        balance_std=float(per_cell.std()),
+        duplication=float(w.sum() / n),
+    )
+
+
+def lower_bound_inner(n_total: int, p: int) -> float:
+    """Eq. 34: Σ|V_h|² ≥ N²/p — the even-partition floor."""
+    return float(n_total) ** 2 / max(p, 1)
+
+
+def estimate_from_samples(
+    sample_cells: np.ndarray,
+    sample_membership: np.ndarray,
+    n_total: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Scale sample-based cell statistics to the full dataset.
+
+    sample_cells: (k,) kernel cell id per sampled pivot.
+    sample_membership: (k, p) whole membership of the samples.
+    Returns (v_est, w_est), each (p,), in object counts.
+
+    This is where Theorem 3 earns its keep: the marginal-CDF error ε of the
+    sample bounds the error of every box-count estimate (box counts are CDF
+    differences), so |V̂_h/N − V_h/N| ≤ 2nε with probability ≥ 1 − 2m·e^{−2kε²}.
+    """
+    k, p = sample_membership.shape
+    scale = n_total / max(k, 1)
+    v_est = np.bincount(sample_cells, minlength=p).astype(np.float64) * scale
+    w_est = sample_membership.sum(0).astype(np.float64) * scale
+    return v_est, w_est
+
+
+def predict_capacity(
+    w_est: np.ndarray,
+    n_shards: int,
+    slack: float = 1.25,
+    quantize: int = 8,
+) -> int:
+    """Static per-(cell, source-shard) dispatch capacity.
+
+    Each source shard sends at most `cap` rows to each destination cell; the
+    compiled buffer is (p, n_shards, cap). We provision the max estimated
+    cell load, spread over shards, times a slack factor; `quantize` rounds up
+    to keep re-compilations rare across epochs. Overflow is exact-handled by
+    the residual pass — slack trades padding FLOPs against residual volume.
+    """
+    per_shard = float(np.max(w_est, initial=1.0)) / max(n_shards, 1)
+    cap = int(np.ceil(per_shard * slack))
+    cap = max(cap, 1)
+    return int(np.ceil(cap / quantize) * quantize)
+
+
+def verification_count(v_sizes: np.ndarray, w_sizes: np.ndarray) -> float:
+    """The paper's Fig. 12 metric: total pairwise verifications performed,
+    Σ_h |V_h|·|W_h| (each kernel row is checked against every whole row)."""
+    return float((np.asarray(v_sizes, np.float64) * np.asarray(w_sizes, np.float64)).sum())

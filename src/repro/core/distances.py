@@ -1,0 +1,120 @@
+"""Metric-space distance functions (paper Def. 1 / Def. 2).
+
+Every metric is exposed in two forms:
+  dist(x, y)        — single-pair distance, x/y: (m,)
+  pairwise(X, Y)    — all-pairs matrix, X: (a, m), Y: (b, m) -> (a, b)
+
+``pairwise`` here is the *reference* (pure jnp) implementation; the Pallas
+verify kernel in ``repro.kernels`` computes the same quantity blocked/fused and
+is validated against this module.
+
+Supported metrics:
+  l1        Σ|x−y|              (paper's running example, Example 1)
+  l2        √Σ(x−y)²            (EUCLIDEAN; evaluated on Netflix/SIFT)
+  linf      max|x−y|
+  cosine    1 − x·y/(‖x‖‖y‖)    (pseudo-metric; common for embeddings — the
+                                 semantic-dedup use case. Triangle inequality
+                                 holds for the induced angular distance; we use
+                                 the angular form when exactness matters.)
+  angular   arccos(cos_sim)/π   (a true metric on the unit sphere)
+  jaccard_minhash
+            1 − mean(sig_x == sig_y) over MinHash signatures (unbiased
+            estimator of Jaccard distance; §6.2 string/set support via
+            ``repro.data.vectorize``)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _l1_pairwise(x: Array, y: Array) -> Array:
+    # (a, 1, m) - (1, b, m) -> (a, b). O(a·b·m) VPU work.
+    return jnp.abs(x[:, None, :] - y[None, :, :]).sum(-1)
+
+
+def _l2_pairwise(x: Array, y: Array) -> Array:
+    # MXU-friendly form: ‖x‖² + ‖y‖² − 2 x·yᵀ. Clamped for fp error.
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    sq = (x * x).sum(-1)[:, None] + (y * y).sum(-1)[None, :] - 2.0 * x @ y.T
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def _linf_pairwise(x: Array, y: Array) -> Array:
+    return jnp.abs(x[:, None, :] - y[None, :, :]).max(-1)
+
+
+def _cosine_pairwise(x: Array, y: Array) -> Array:
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+    yn = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-12)
+    return 1.0 - xn @ yn.T
+
+
+def _angular_pairwise(x: Array, y: Array) -> Array:
+    cos = 1.0 - _cosine_pairwise(x, y)
+    return jnp.arccos(jnp.clip(cos, -1.0, 1.0)) / jnp.pi
+
+
+def _jaccard_minhash_pairwise(x: Array, y: Array) -> Array:
+    # x, y are integer MinHash signatures; distance = 1 − estimated Jaccard sim.
+    eq = (x[:, None, :] == y[None, :, :]).astype(jnp.float32)
+    return 1.0 - eq.mean(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """A metric-space distance (Def. 1): the function plus metadata.
+
+    ``mxu_friendly`` marks metrics whose pairwise form reduces to a matmul
+    (the Pallas kernel routes those through the MXU path).
+    """
+
+    name: str
+    pairwise: Callable[[Array, Array], Array]
+    mxu_friendly: bool = False
+    true_metric: bool = True
+    # Equality-based metrics (MinHash) are only meaningful on the data's
+    # integer support: model-GENERATED pivots must be rounded onto it, or
+    # every distance degenerates to 1.0 (floats never collide).
+    discrete: bool = False
+
+    def dist(self, x: Array, y: Array) -> Array:
+        return self.pairwise(x[None, :], y[None, :])[0, 0]
+
+
+METRICS: dict[str, Metric] = {
+    "l1": Metric("l1", _l1_pairwise),
+    "l2": Metric("l2", _l2_pairwise, mxu_friendly=True),
+    "linf": Metric("linf", _linf_pairwise),
+    "cosine": Metric("cosine", _cosine_pairwise, mxu_friendly=True, true_metric=False),
+    "angular": Metric("angular", _angular_pairwise, mxu_friendly=True),
+    "jaccard_minhash": Metric("jaccard_minhash", _jaccard_minhash_pairwise, discrete=True),
+}
+
+
+def get_metric(name: str) -> Metric:
+    try:
+        return METRICS[name]
+    except KeyError:
+        raise ValueError(f"unknown metric {name!r}; have {sorted(METRICS)}") from None
+
+
+def pairwise(x: Array, y: Array, metric: str = "l1") -> Array:
+    """All-pairs distance matrix (reference implementation)."""
+    return get_metric(metric).pairwise(x, y)
+
+
+def brute_force_join(x: Array, delta: float, metric: str = "l1") -> Array:
+    """Oracle self-join: boolean (n, n) matrix, True where D(o_i,o_j) ≤ δ, i < j.
+
+    Used only by tests/benchmarks as ground truth (quadratic)."""
+    d = pairwise(x, x, metric)
+    n = x.shape[0]
+    iu = jnp.triu_indices(n, k=1)
+    mask = jnp.zeros((n, n), bool).at[iu].set(True)
+    return (d <= delta) & mask

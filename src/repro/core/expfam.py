@@ -1,0 +1,246 @@
+"""Exponential-family distribution estimation (paper §3.3, Lemma 1, Table 1).
+
+The paper models each cluster node's local shard as i.i.d. draws from an
+exponential-family distribution p(x; η) = h(x)·exp(ηᵀT(x) − α(η)) and fits η by
+closed-form MLE: η⁰ = μ⁻¹(mean of T(o_i)) where μ(η) = E_η[T(X)] (Lemma 1).
+
+We implement the families the paper's Table 1 highlights that are useful for
+real vector data, each as a *product* distribution over the m dimensions (the
+paper's error definition, Def. 4, and its partitioning both operate on
+marginals, so per-dimension products are the faithful granularity):
+
+  normal       T(x) = (x, x²)    → μ, σ²       (w = 2 params / dim)
+  exponential  T(x) = x          → λ           (w = 1; requires x ≥ 0)
+  gamma        T(x) = (x, log x) → (α, β)      (w = 2; requires x > 0;
+                                                MLE has no closed form in α —
+                                                Lemma 1's μ⁻¹ is evaluated with
+                                                a Newton iteration on ψ(α),
+                                                exactly the paper's remark that
+                                                gradient methods solve families
+                                                without explicit E_η[T] inverse)
+
+Everything here is pure JAX and runs *inside* the per-shard stats pass of the
+distributed join — sufficient statistics are the only thing ever reduced, so a
+shard's fit costs one streaming pass and O(m) memory, matching the paper's
+"lightweight, no shuffle" design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma, erf, gammainc, polygamma
+
+Array = jnp.ndarray
+
+_SQRT2 = 1.4142135623730951
+FAMILIES = ("normal", "exponential", "gamma")
+
+
+class SuffStats(NamedTuple):
+    """Per-dimension sufficient statistics Σ T(o_i) plus the count.
+
+    This is the *only* cross-device payload of the stats phase: for every
+    family in Table 1 that we support, T(x) ⊆ {x, x², log x}, so we carry all
+    three sums (m floats each) and the count. Shards combine by addition.
+    """
+
+    n: Array  # scalar, number of (weighted) observations
+    sum_x: Array  # (m,)
+    sum_x2: Array  # (m,)
+    sum_logx: Array  # (m,)  computed on max(x, tiny) to stay finite
+
+
+def suff_stats(x: Array, mask: Array | None = None) -> SuffStats:
+    """One-pass sufficient statistics for an (n, m) shard.
+
+    ``mask``: optional (n,) validity mask (padding rows in static-shape
+    distributed buffers contribute nothing).
+    """
+    x = x.astype(jnp.float32)
+    if mask is None:
+        n = jnp.asarray(x.shape[0], jnp.float32)
+        w = None
+    else:
+        w = mask.astype(jnp.float32)[:, None]
+        n = w.sum()
+
+    def _sum(v: Array) -> Array:
+        return (v if w is None else v * w).sum(0)
+
+    safe = jnp.maximum(jnp.abs(x), 1e-20)  # log of |x| as a stand-in off-support
+    return SuffStats(n=n, sum_x=_sum(x), sum_x2=_sum(x * x), sum_logx=_sum(jnp.log(safe)))
+
+
+def merge_stats(stats: SuffStats) -> SuffStats:
+    """Combine per-shard stats stacked on a leading axis into global stats."""
+    return SuffStats(*(s.sum(0) for s in stats))
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyParams:
+    """Fitted per-dimension parameters for one family. All fields (m,)."""
+
+    family: str
+    a: Array  # normal: μ      exponential: λ      gamma: α (shape)
+    b: Array  # normal: σ²     exponential: unused gamma: β (rate)
+
+    @property
+    def n_params(self) -> int:
+        """w in Theorem 1 (degrees-of-freedom correction), per dimension."""
+        return 1 if self.family == "exponential" else 2
+
+
+# --------------------------------------------------------------------------
+# MLE fits (Lemma 1): η⁰ = μ⁻¹( Σ T(o_i) / N )
+# --------------------------------------------------------------------------
+
+
+def fit_normal(s: SuffStats) -> FamilyParams:
+    n = jnp.maximum(s.n, 1.0)
+    mu = s.sum_x / n
+    var = jnp.maximum(s.sum_x2 / n - mu * mu, 1e-12)
+    return FamilyParams("normal", mu, var)
+
+
+def fit_exponential(s: SuffStats) -> FamilyParams:
+    n = jnp.maximum(s.n, 1.0)
+    mean = jnp.maximum(s.sum_x / n, 1e-12)
+    lam = 1.0 / mean
+    return FamilyParams("exponential", lam, jnp.zeros_like(lam))
+
+
+def fit_gamma(s: SuffStats, newton_iters: int = 12) -> FamilyParams:
+    """Gamma MLE. μ(η) has no explicit inverse: solve
+
+        log α − ψ(α) = log( mean(x) ) − mean(log x)  =: c
+
+    by Newton on g(α) = log α − ψ(α) − c (g is monotone decreasing in α).
+    Initialized with the Minka-style approximation α₀ ≈ (3−c+√((c−3)²+24c))/(12c).
+    """
+    n = jnp.maximum(s.n, 1.0)
+    mean = jnp.maximum(s.sum_x / n, 1e-12)
+    mean_log = s.sum_logx / n
+    c = jnp.maximum(jnp.log(mean) - mean_log, 1e-8)
+    alpha = (3.0 - c + jnp.sqrt((c - 3.0) ** 2 + 24.0 * c)) / (12.0 * c)
+
+    def body(alpha, _):
+        g = jnp.log(alpha) - digamma(alpha) - c
+        gp = 1.0 / alpha - polygamma(1, alpha)
+        alpha = jnp.clip(alpha - g / gp, 1e-4, 1e7)
+        return alpha, None
+
+    alpha, _ = jax.lax.scan(body, alpha, None, length=newton_iters)
+    beta = alpha / mean
+    return FamilyParams("gamma", alpha, beta)
+
+
+def fit(family: str, s: SuffStats) -> FamilyParams:
+    if family == "normal":
+        return fit_normal(s)
+    if family == "exponential":
+        return fit_exponential(s)
+    if family == "gamma":
+        return fit_gamma(s)
+    raise ValueError(f"unknown family {family!r}; have {FAMILIES}")
+
+
+# --------------------------------------------------------------------------
+# CDFs / quantiles / sampling — used by strata construction (Alg. 2), the
+# goodness-of-fit cells (Lemma 2), and the Gibbs sampler's p(X|E=i) (Eq. 18).
+# --------------------------------------------------------------------------
+
+
+def cdf(p: FamilyParams, x: Array) -> Array:
+    """Per-dimension CDF, broadcasting x: (..., m) against params (m,)."""
+    if p.family == "normal":
+        z = (x - p.a) / jnp.sqrt(2.0 * p.b)
+        return 0.5 * (1.0 + erf(z))
+    if p.family == "exponential":
+        return jnp.where(x > 0, 1.0 - jnp.exp(-p.a * jnp.maximum(x, 0.0)), 0.0)
+    if p.family == "gamma":
+        return jnp.where(x > 0, gammainc(p.a, p.b * jnp.maximum(x, 1e-30)), 0.0)
+    raise ValueError(p.family)
+
+
+def quantile(p: FamilyParams, q: Array, bisect_iters: int = 60) -> Array:
+    """Inverse CDF per dimension. Normal uses erfinv; others bisect.
+
+    q: (..., m) in (0, 1) → same shape of x values.
+    """
+    q = jnp.clip(q, 1e-6, 1.0 - 1e-6)
+    if p.family == "normal":
+        return p.a + jnp.sqrt(2.0 * p.b) * jax.scipy.special.erfinv(2.0 * q - 1.0)
+    if p.family == "exponential":
+        return -jnp.log1p(-q) / p.a
+    # gamma: monotone bisection on a generous bracket.
+    hi0 = (p.a + 10.0 * jnp.sqrt(p.a) + 10.0) / p.b
+
+    def body(state, _):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        below = cdf(p, mid) < q
+        return (jnp.where(below, mid, lo), jnp.where(below, hi, mid)), None
+
+    (lo, hi), _ = jax.lax.scan(
+        body, (jnp.zeros_like(q), jnp.broadcast_to(hi0, q.shape)), None, length=bisect_iters
+    )
+    return 0.5 * (lo + hi)
+
+
+def sample(p: FamilyParams, key: jax.Array, shape: tuple[int, ...]) -> Array:
+    """Draw samples of shape (*shape, m) from the fitted product distribution."""
+    m = p.a.shape[-1]
+    if p.family == "normal":
+        z = jax.random.normal(key, (*shape, m))
+        return p.a + jnp.sqrt(p.b) * z
+    if p.family == "exponential":
+        return jax.random.exponential(key, (*shape, m)) / p.a
+    if p.family == "gamma":
+        return jax.random.gamma(key, p.a, (*shape, m)) / p.b
+    raise ValueError(p.family)
+
+
+def log_prob(p: FamilyParams, x: Array) -> Array:
+    """Per-dimension log-density (summed over dims), for diagnostics."""
+    if p.family == "normal":
+        lp = -0.5 * ((x - p.a) ** 2 / p.b + jnp.log(2.0 * jnp.pi * p.b))
+    elif p.family == "exponential":
+        lp = jnp.where(x >= 0, jnp.log(p.a) - p.a * x, -jnp.inf)
+    elif p.family == "gamma":
+        lp = jnp.where(
+            x > 0,
+            p.a * jnp.log(p.b) - jax.scipy.special.gammaln(p.a) + (p.a - 1) * jnp.log(jnp.maximum(x, 1e-30)) - p.b * x,
+            -jnp.inf,
+        )
+    else:
+        raise ValueError(p.family)
+    return lp.sum(-1)
+
+
+# --------------------------------------------------------------------------
+# Packing — FamilyParams must cross shard_map boundaries as flat arrays.
+# --------------------------------------------------------------------------
+
+_FAMILY_ID = {name: i for i, name in enumerate(FAMILIES)}
+
+
+def pack(p: FamilyParams) -> Array:
+    """(2m + 1,) flat vector: [family_id, a..., b...]."""
+    fid = jnp.full((1,), _FAMILY_ID[p.family], jnp.float32)
+    return jnp.concatenate([fid, p.a.astype(jnp.float32), p.b.astype(jnp.float32)])
+
+
+def unpack(v: Array, family: str | None = None) -> FamilyParams:
+    m = (v.shape[-1] - 1) // 2
+    fam = family if family is not None else FAMILIES[int(v[0])]
+    return FamilyParams(fam, v[1 : 1 + m], v[1 + m :])
+
+
+@functools.partial(jax.jit, static_argnames=("family",))
+def fit_jit(family: str, x: Array) -> Array:
+    """Convenience: data → packed params in one jitted call."""
+    return pack(fit(family, suff_stats(x)))

@@ -1,0 +1,129 @@
+"""Chi-square goodness-of-fit confidence (paper §3.4: Lemma 2, Theorem 1, Eq. 10).
+
+The paper's five-step hypothesis test, per local node i:
+  1. H₀: X ~ P(x; η⁰)                                   (Eq. 7)
+  2. Pearson statistic K_i = Σ_j (ν_j − N·q_j)² / (N·q_j)  (Lemma 2 / Eq. 8)
+  3. K_i ~ χ²(t − w − 1) under H₀                       (Theorem 1)
+  4. evaluate K_i* on the node's data                   (Eq. 9)
+  5. confidence c_i⁰ = sup{c : K_i* > χ²_{t−w−1}(c)}    (Eq. 10)
+
+Step 5's sup is exactly the p-value P[χ²_{df} ≥ K*] — the probability, under
+H₀, of a statistic at least as extreme as observed. We compute it with the
+regularized incomplete gamma function (no scipy dependency).
+
+Cells Z_j: the paper discretizes the space into t cells set "empirically". We
+use *equal-probability* cells per dimension under the fitted marginal — i.e.
+cell edges at fitted quantiles — which (a) makes every expected count N/t
+(maximally powerful Pearson cells, Mann–Wald), and (b) lets the statistic for a
+product distribution decompose as a sum of per-dimension statistics with
+additive degrees of freedom, which is what Theorem 2's global statistic
+\\bar{K} = Σ_i K_i needs.
+
+Everything is fixed-shape JAX so it can run inside the per-shard stats pass.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammainc
+
+from repro.core import expfam
+
+Array = jnp.ndarray
+
+
+def chi2_cdf(x: Array, df: Array) -> Array:
+    """CDF of χ²_df at x: P(df/2, x/2) (regularized lower incomplete gamma)."""
+    df = jnp.asarray(df, jnp.float32)
+    return gammainc(df / 2.0, jnp.maximum(x, 0.0) / 2.0)
+
+
+def chi2_sf(x: Array, df: Array) -> Array:
+    """Survival function 1 − CDF: the Eq. 10 confidence/p-value."""
+    return 1.0 - chi2_cdf(x, df)
+
+
+class GofResult(NamedTuple):
+    statistic: Array  # K_i* — summed Pearson statistic over dims (scalar)
+    dof: Array  # t·m − w·m − 1-per-dim aggregated degrees of freedom
+    confidence: Array  # c_i⁰ ∈ [0, 1]
+    per_dim_statistic: Array  # (m,) decomposition, for diagnostics
+
+
+def pearson_statistic(
+    x: Array,
+    params: expfam.FamilyParams,
+    t: int = 8,
+    mask: Array | None = None,
+) -> GofResult:
+    """Evaluate K* (Eq. 9) on a shard with t equal-probability cells per dim.
+
+    x: (n, m); mask: optional (n,) validity. Cell counts ν_j come from a
+    one-pass histogram on the CDF-transform u = F(x) ∈ [0,1]: equal-probability
+    cells in x-space are equal-*width* cells in u-space, so the histogram is a
+    single floor() — no per-cell quantile evaluation.
+    """
+    u = expfam.cdf(params, x.astype(jnp.float32))  # (n, m) in [0, 1]
+    cell = jnp.clip((u * t).astype(jnp.int32), 0, t - 1)  # (n, m)
+    w = None if mask is None else mask.astype(jnp.float32)
+    n_eff = jnp.asarray(x.shape[0], jnp.float32) if w is None else w.sum()
+
+    onehot = jax.nn.one_hot(cell, t, dtype=jnp.float32)  # (n, m, t)
+    if w is not None:
+        onehot = onehot * w[:, None, None]
+    nu = onehot.sum(0)  # (m, t) observed counts per dim/cell
+
+    expected = jnp.maximum(n_eff / t, 1e-9)  # equal-probability cells
+    per_dim = ((nu - expected) ** 2 / expected).sum(-1)  # (m,)
+    k_star = per_dim.sum()
+
+    m = x.shape[-1]
+    w_params = params.n_params
+    # df per dim: t − w − 1 (Theorem 1); product model sums over dims.
+    dof = jnp.maximum(jnp.asarray(m * (t - w_params - 1), jnp.float32), 1.0)
+    conf = chi2_sf(k_star, dof)
+    return GofResult(k_star, dof, conf, per_dim)
+
+
+def fit_best_family(
+    x: Array,
+    t: int = 8,
+    mask: Array | None = None,
+    families: tuple[str, ...] = expfam.FAMILIES,
+) -> tuple[expfam.FamilyParams, GofResult]:
+    """Fit every candidate family and keep the max-confidence one (paper §3.4:
+    "if there are multiple possible distributions, we select the distribution
+    with the maximum confidence").
+
+    Families whose support excludes the data (e.g. exponential on negative
+    values) self-eliminate: their cells collapse and confidence → 0.
+    """
+    stats = expfam.suff_stats(x, mask)
+    nonneg = (
+        jnp.all(x >= 0)
+        if mask is None
+        else jnp.all((x >= 0) | ~mask.astype(bool)[:, None])
+    )
+    best: tuple[expfam.FamilyParams, GofResult] | None = None
+    for fam in families:
+        params = expfam.fit(fam, stats)
+        res = pearson_statistic(x, params, t=t, mask=mask)
+        if fam in ("exponential", "gamma"):
+            res = res._replace(confidence=jnp.where(nonneg, res.confidence, 0.0))
+        if best is None or float(res.confidence) > float(best[1].confidence):
+            best = (params, res)
+    assert best is not None
+    return best
+
+
+def global_confidence(k_stars: Array, dofs: Array) -> Array:
+    """Theorem 2 machinery: the global statistic is \\bar{K}* = Σ_i K_i* with
+    Σ_i df_i degrees of freedom (sum of independent χ² is χ² with summed df);
+    returns \\bar{c}⁰ (Eq. 13). Theorem 2 states \\bar{c}⁰ ≥ min_i c_i⁰ (the
+    paper's proof ends with the inequality written the other way round — a
+    typo; the *statement* direction is the one that holds for p-values of
+    summed χ² statistics, and tests/test_gof.py checks it empirically).
+    """
+    return chi2_sf(k_stars.sum(), dofs.sum())

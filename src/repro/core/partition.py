@@ -1,0 +1,284 @@
+"""Partition strategies (paper §5.2 Alg. 5 — iterative, §5.3 Alg. 6 — learning).
+
+Both strategies recursively bisect the *target space* (the ℝⁿ image of the
+space mapping) at the ⌈p/2⌉-fractile of a chosen dimension until p leaf areas
+exist:
+
+  iterative  — the split dimension is chosen at random (Alg. 5 line 4);
+               balances KERNEL sizes → minimizes the inner cost (Eq. 34).
+  learning   — pivots carry labels from hierarchical clustering in the origin
+               space; the split dimension maximizes the regularized
+               information-gain ratio (Eqs. 35–37, i.e. C4.5 gain ratio with
+               Eq. 35 being exactly the label entropy); compact areas →
+               smaller WHOLE partitions → lower outer cost.
+
+Correctness refinement vs. the paper (documented in DESIGN.md §2): the paper
+computes each area's Minimum Bounding Box from the *pivots* that landed in it
+and expands that by δ. Pivot MBBs do not cover the space, so an object can
+fall outside every pivot MBB and its δ-neighbour could be missed. We instead
+take the leaf's *half-space box* (the intersection of its split constraints —
+these tile ℝⁿ, so every object has exactly one KERNEL cell), and optionally
+*tighten* to the MBB of the actual objects assigned to the cell (a cheap
+segment-min/max second pass) before the δ-expansion. Both variants satisfy
+Lemma 4; tightening strictly shrinks WHOLE partitions.
+
+Tree construction is control-plane work over k≈3200 pivots — it runs on host
+numpy once per join. Cell *assignment* of the full dataset is data-plane and
+fully vectorized jnp (runs inside the jitted map phase).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+BIG = 3.0e38  # stand-in for ±inf that stays finite in fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """p leaf boxes of the split tree in target space.
+
+    kernel_lo/hi: (p, n) — half-open boxes [lo, hi) tiling ℝⁿ.
+    whole_lo/hi:  (p, n) — kernel boxes expanded by δ (after optional
+                  tightening). WHOLE membership is closed: [lo − δ, hi + δ].
+    delta:        the join threshold used for the expansion.
+    """
+
+    kernel_lo: Array
+    kernel_hi: Array
+    whole_lo: Array
+    whole_hi: Array
+    delta: float
+
+    @property
+    def p(self) -> int:
+        return self.kernel_lo.shape[0]
+
+    @property
+    def n_dims(self) -> int:
+        return self.kernel_lo.shape[1]
+
+
+# --------------------------------------------------------------------------
+# Label generation for the learning strategy (hierarchical clustering, §5.3)
+# --------------------------------------------------------------------------
+
+
+def single_linkage_labels(dist_matrix: np.ndarray, n_clusters: int) -> np.ndarray:
+    """Single-linkage agglomerative clustering via the MST equivalence:
+    build the minimum spanning tree (Prim, O(k²)) and delete the
+    (n_clusters − 1) heaviest edges; connected components are the clusters.
+
+    dist_matrix: (k, k) origin-space pivot distances.
+    Returns int labels (k,).
+    """
+    k = dist_matrix.shape[0]
+    n_clusters = int(min(max(n_clusters, 1), k))
+    if n_clusters == 1:
+        return np.zeros((k,), np.int64)
+
+    in_tree = np.zeros(k, bool)
+    in_tree[0] = True
+    best = dist_matrix[0].copy()
+    parent = np.zeros(k, np.int64)
+    edges = []  # (weight, a, b)
+    for _ in range(k - 1):
+        best_masked = np.where(in_tree, np.inf, best)
+        j = int(np.argmin(best_masked))
+        edges.append((best[j], parent[j], j))
+        in_tree[j] = True
+        closer = dist_matrix[j] < best
+        parent = np.where(closer, j, parent)
+        best = np.minimum(best, dist_matrix[j])
+
+    edges.sort(key=lambda e: e[0])
+    keep = edges[: k - n_clusters]  # drop the n_clusters−1 heaviest
+
+    # Union-find over the kept edges.
+    uf = np.arange(k)
+
+    def find(a: int) -> int:
+        while uf[a] != a:
+            uf[a] = uf[uf[a]]
+            a = uf[a]
+        return a
+
+    for _, a, b in keep:
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            uf[ra] = rb
+    roots = np.array([find(i) for i in range(k)])
+    _, labels = np.unique(roots, return_inverse=True)
+    return labels
+
+
+# --------------------------------------------------------------------------
+# Gain-ratio dimension scoring (Eqs. 35–37)
+# --------------------------------------------------------------------------
+
+
+def _entropy(labels: np.ndarray) -> float:
+    """Eq. 35: Cost(S, L) = Σ_y (freq/|S|)·(−log freq/|S|) — label entropy."""
+    if labels.size == 0:
+        return 0.0
+    _, counts = np.unique(labels, return_counts=True)
+    f = counts / labels.size
+    return float(-(f * np.log(np.maximum(f, 1e-12))).sum())
+
+
+def gain_ratio(labels: np.ndarray, left_mask: np.ndarray) -> float:
+    """Eq. 37: F_d = C_d / split_info, with C_d the entropy reduction (Eq. 36)
+    and split_info = −Σ |K|/|S| log |K|/|S| the regularizer."""
+    n = labels.size
+    nl = int(left_mask.sum())
+    nr = n - nl
+    if nl == 0 or nr == 0:
+        return -np.inf
+    h = _entropy(labels)
+    hl = _entropy(labels[left_mask])
+    hr = _entropy(labels[~left_mask])
+    gain = h - (nl / n) * hl - (nr / n) * hr
+    fl, fr = nl / n, nr / n
+    split_info = -(fl * np.log(fl) + fr * np.log(fr))
+    return float(gain / max(split_info, 1e-12))
+
+
+# --------------------------------------------------------------------------
+# Tree construction (Alg. 5 with Alg. 6 as the line-5 replacement)
+# --------------------------------------------------------------------------
+
+
+def build_partition(
+    pivots_mapped: np.ndarray,
+    p: int,
+    delta: float,
+    strategy: str = "learning",
+    labels: np.ndarray | None = None,
+    seed: int = 0,
+) -> PartitionPlan:
+    """Recursively split the mapped pivots into p leaf boxes.
+
+    pivots_mapped: (k, n) target-space pivot coordinates (numpy).
+    labels: required for strategy="learning" (origin-space cluster labels).
+    """
+    pivots_mapped = np.asarray(pivots_mapped, np.float64)
+    k, n = pivots_mapped.shape
+    if strategy == "learning" and labels is None:
+        raise ValueError("learning strategy requires pivot labels")
+    if p < 1:
+        raise ValueError("p must be ≥ 1")
+    rng = np.random.default_rng(seed)
+
+    boxes: list[tuple[np.ndarray, np.ndarray]] = []
+
+    def recurse(idx: np.ndarray, p_want: int, lo: np.ndarray, hi: np.ndarray) -> None:
+        if p_want == 1:
+            boxes.append((lo.copy(), hi.copy()))
+            return
+        pts = pivots_mapped[idx]
+        lab = None if labels is None else labels[idx]
+        p_left = int(np.ceil(p_want / 2))
+        frac = p_left / p_want  # Alg. 5 line 5: the ⌈p/2⌉/p fractile
+
+        if strategy == "iterative":
+            # Random dim, but skip degenerate (constant) dims when possible.
+            spans = pts.max(0) - pts.min(0) if pts.size else np.ones(n)
+            candidates = np.flatnonzero(spans > 0)
+            d = int(rng.choice(candidates)) if candidates.size else int(rng.integers(n))
+        elif strategy == "learning":
+            best_d, best_gain = 0, -np.inf
+            for d_try in range(n):
+                cut_try = np.quantile(pts[:, d_try], frac) if pts.size else 0.0
+                left = pts[:, d_try] < cut_try
+                g = gain_ratio(lab, left) if lab is not None else -np.inf
+                if g > best_gain:
+                    best_gain, best_d = g, d_try
+            d = best_d
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+
+        cut = float(np.quantile(pts[:, d], frac)) if pts.size else float(0.5 * (lo[d] + hi[d]))
+        # Guard: a cut at the box edge would create an empty child box.
+        cut = float(np.clip(cut, lo[d] + 1e-9 if lo[d] > -BIG else -BIG / 2, hi[d]))
+
+        left_sel = pts[:, d] < cut if pts.size else np.zeros(0, bool)
+        hi_l = hi.copy()
+        hi_l[d] = cut
+        lo_r = lo.copy()
+        lo_r[d] = cut
+        recurse(idx[left_sel], p_left, lo, hi_l)
+        recurse(idx[~left_sel], p_want - p_left, lo_r, hi)
+
+    lo0 = np.full((n,), -BIG)
+    hi0 = np.full((n,), BIG)
+    recurse(np.arange(k), p, lo0, hi0)
+    assert len(boxes) == p, (len(boxes), p)
+
+    kl = np.stack([b[0] for b in boxes]).astype(np.float32)
+    kh = np.stack([b[1] for b in boxes]).astype(np.float32)
+    return PartitionPlan(
+        kernel_lo=jnp.asarray(kl),
+        kernel_hi=jnp.asarray(kh),
+        whole_lo=jnp.asarray(kl - delta),
+        whole_hi=jnp.asarray(kh + delta),
+        delta=float(delta),
+    )
+
+
+# --------------------------------------------------------------------------
+# Data-plane: assignment + membership (jnp, runs inside the jitted map phase)
+# --------------------------------------------------------------------------
+
+
+def assign_kernel(plan: PartitionPlan, x_mapped: Array) -> Array:
+    """KERNEL cell id per object: the unique leaf box containing it.
+
+    Boxes are half-open [lo, hi) and tile ℝⁿ, so exactly one matches; argmax
+    over the (N, p) containment mask returns it. O(N·p·n) — vectorized.
+    """
+    inside = (x_mapped[:, None, :] >= plan.kernel_lo[None]) & (
+        x_mapped[:, None, :] < plan.kernel_hi[None]
+    )
+    return jnp.argmax(inside.all(-1), axis=1).astype(jnp.int32)
+
+
+def whole_membership(plan: PartitionPlan, x_mapped: Array) -> Array:
+    """(N, p) bool — WHOLE partition membership (δ-expanded, closed boxes)."""
+    inside = (x_mapped[:, None, :] >= plan.whole_lo[None]) & (
+        x_mapped[:, None, :] <= plan.whole_hi[None]
+    )
+    return inside.all(-1)
+
+
+def tighten(plan: PartitionPlan, x_mapped: Array, cell_ids: Array) -> PartitionPlan:
+    """Shrink each kernel box to the MBB of its assigned objects, then
+    re-expand by δ. Empty cells collapse to a point box (no members ⇒ no
+    verifications). Preserves Lemma 4: every object stays inside its own
+    cell's box, so every δ-neighbour stays inside the expanded box.
+    """
+    p = plan.p
+    seg_min = jax.ops.segment_min(x_mapped, cell_ids, num_segments=p)
+    seg_max = jax.ops.segment_max(x_mapped, cell_ids, num_segments=p)
+    empty = jax.ops.segment_sum(jnp.ones_like(cell_ids, jnp.float32), cell_ids, num_segments=p) == 0
+    lo = jnp.where(empty[:, None], BIG, seg_min)
+    hi = jnp.where(empty[:, None], -BIG, seg_max)
+    return PartitionPlan(
+        kernel_lo=plan.kernel_lo,
+        kernel_hi=plan.kernel_hi,
+        whole_lo=lo - plan.delta,
+        whole_hi=hi + plan.delta,
+        delta=plan.delta,
+    )
+
+
+def partition_stats(cell_ids: np.ndarray, membership: np.ndarray) -> dict:
+    """|V_h| and |W_h| per cell — feeds the cost model and Table 3 metrics."""
+    p = membership.shape[1]
+    v = np.bincount(np.asarray(cell_ids), minlength=p).astype(np.int64)
+    w = np.asarray(membership).sum(0).astype(np.int64)
+    return {"v_sizes": v, "w_sizes": w}

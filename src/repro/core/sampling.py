@@ -1,0 +1,358 @@
+"""Sampling algorithms (paper §4): the error-bounded pivot selection.
+
+Three samplers, matching the paper's experimental arms:
+
+  random_sample            — the baseline every prior system used (§1, §7 "Random")
+  distribution_aware       — Alg. 2: per-node stratified sampling with Eq. 11
+                             allocation and confidence-based rejection
+  generative               — Alg. 3/4: Gibbs chain over (E, C, X) built from the
+                             broadcast per-node (family, η, c⁰, N) — network cost
+                             O(M²) parameters, independent of sample size k
+
+plus the supporting theory:
+
+  allocate_samples         — Eq. 11:  k_i ∝ N_i / c_i⁰
+  required_sample_size     — Theorem 3 inverted: k ≥ ln(2m/δ) / (2ε²)
+  sampling_error           — Def. 4:  max over dims of the marginal KS distance
+  error_bound_probability  — Theorem 3 forward form: 2m·exp(−2kε²)
+
+JAX-shape-static adaptation of Alg. 4 (documented in DESIGN.md §2): the paper
+loops "until k accepted"; data-dependent loop lengths do not compile, so we run
+a fixed-length chain of L = ceil(k / ĉ_min) + slack steps, mask accepted draws,
+and compact the first k accepted with an argsort. ``gibbs_chain_numpy`` is the
+exact paper loop (reference, used in tests to cross-check the distribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expfam
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# Theory: error bound (Theorem 3) and sample sizing
+# --------------------------------------------------------------------------
+
+
+def error_bound_probability(k: int, epsilon: float, m: int) -> float:
+    """P[D_k ≥ ε] < 2m·exp(−2kε²) (Theorem 3)."""
+    return float(2.0 * m * np.exp(-2.0 * k * epsilon**2))
+
+
+def required_sample_size(epsilon: float, fail_prob: float, m: int) -> int:
+    """Smallest k with 2m·exp(−2kε²) ≤ fail_prob — the paper's §4.3 guideline
+    for choosing k from a tolerated error level (previous work had no such
+    guideline and could only blindly enlarge k)."""
+    return int(np.ceil(np.log(2.0 * m / fail_prob) / (2.0 * epsilon**2)))
+
+
+def sampling_error(samples: Array, reference: Array) -> Array:
+    """Def. 4: D_k = max_d sup_x |P̃_d(x) − P_d(x)| — the maximum marginal
+    Kolmogorov–Smirnov distance, with the *empirical* CDF of ``reference``
+    standing in for the true distribution (how the tests/benchmarks use it).
+    """
+    s = jnp.sort(samples, axis=0)  # (k, m)
+    r = jnp.sort(reference, axis=0)  # (n, m)
+    k = s.shape[0]
+    # Empirical CDF of reference evaluated at sample order statistics.
+    pos = jax.vmap(jnp.searchsorted, in_axes=(1, 1), out_axes=1)(r, s)
+    ref_cdf = pos.astype(jnp.float32) / r.shape[0]  # (k, m)
+    emp_lo = jnp.arange(k, dtype=jnp.float32)[:, None] / k
+    emp_hi = (jnp.arange(k, dtype=jnp.float32)[:, None] + 1.0) / k
+    dks = jnp.maximum(jnp.abs(ref_cdf - emp_lo), jnp.abs(ref_cdf - emp_hi))
+    return dks.max()
+
+
+# --------------------------------------------------------------------------
+# Eq. 11 allocation
+# --------------------------------------------------------------------------
+
+
+def allocate_samples(n_i: np.ndarray, conf_i: np.ndarray, k: int) -> np.ndarray:
+    """Per-node sample counts  k_i = k · (N_i/c_i⁰) / Σ_j (N_j/c_j⁰)  (Eq. 11),
+    rounded by largest remainder so Σ k_i == k exactly.
+
+    Lower confidence ⇒ *more* samples from that node (the paper's intuition:
+    we know less about it, so spend budget learning it).
+    """
+    weights = np.asarray(n_i, np.float64) / np.clip(np.asarray(conf_i, np.float64), 1e-6, None)
+    shares = k * weights / weights.sum()
+    base = np.floor(shares).astype(np.int64)
+    rem = k - int(base.sum())
+    if rem > 0:
+        order = np.argsort(-(shares - base))
+        base[order[:rem]] += 1
+    return base
+
+
+# --------------------------------------------------------------------------
+# Baseline: simple random sampling
+# --------------------------------------------------------------------------
+
+
+def random_sample(key: jax.Array, x: Array, k: int) -> Array:
+    """Uniform sampling without replacement — the prior-work baseline.
+    k is clamped to the population (relevant for oversized-k ablations)."""
+    k = min(k, x.shape[0])
+    idx = jax.random.choice(key, x.shape[0], shape=(k,), replace=False)
+    return x[idx]
+
+
+# --------------------------------------------------------------------------
+# Alg. 2: distribution-aware stratified sampling (per node)
+# --------------------------------------------------------------------------
+
+
+def stratified_local_sample(
+    key: jax.Array,
+    x: Array,
+    params: expfam.FamilyParams,
+    confidence: Array,
+    lc: int,
+) -> Array:
+    """Alg. 2 lines 3–7 on one node: split the node's space into ⌊√lc⌋
+    equal-probability boxes under F_i, draw lc·P{X∈B_j} from each box,
+    rejecting each draw with probability 1 − c_i⁰ (resample within box).
+
+    Boxes: equal-probability intervals of the FIRST marginal's CDF,
+    u = F_1(x_1) — uniform on [0,1) under the fitted model, so every box has
+    P{X∈B_j} = 1/n_strata and the quota lc·P{X∈B_j} is the even allocation
+    the paper intends. (A mean-of-CDFs transform is NOT uniform — it follows
+    a Bates distribution and starves the tail strata; tests caught exactly
+    that regression.)
+
+    Static-shape notes: rejection/resampling is a Gumbel-top-k weighted draw
+    where rejected candidates get demoted priority (distributionally
+    equivalent because the box pool is exchangeable); boxes with fewer
+    members than quota return their surplus to the highest-priority leftover
+    rows globally, so the sampler always returns exactly lc real objects.
+    """
+    n = x.shape[0]
+    n_strata = max(int(np.floor(np.sqrt(max(lc, 1)))), 1)
+    u = expfam.cdf(params, x.astype(jnp.float32))[:, 0]  # (n,) uniform under fit
+    stratum = jnp.clip((u * n_strata).astype(jnp.int32), 0, n_strata - 1)
+
+    # Per-stratum quota, summing exactly to lc.
+    quota = np.full((n_strata,), lc // n_strata, np.int64)
+    quota[: lc - int(quota.sum())] += 1
+
+    k_round, k_acc = jax.random.split(key)
+    # Acceptance degree (Alg. 2 line 6): a draw survives w.p. c_i⁰.
+    accept = jax.random.uniform(k_acc, (n,)) < confidence
+    gumbel = jax.random.gumbel(k_round, (n,))
+    # Rejected rows get heavily demoted priority → equivalent to resampling
+    # from the remaining pool of their stratum.
+    priority = jnp.where(accept, gumbel, gumbel - 1e6)
+
+    # Rank rows within their stratum by priority (descending).
+    order = jnp.lexsort((-priority, stratum))  # stable: stratum asc, prio desc
+    sorted_stratum = stratum[order]
+    first_in_stratum = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_stratum[1:] != sorted_stratum[:-1]]
+    )
+    pos_in_stratum = jnp.arange(n) - jax.lax.associative_scan(
+        jnp.maximum, jnp.where(first_in_stratum, jnp.arange(n), -1)
+    )
+    take = pos_in_stratum < jnp.asarray(quota)[sorted_stratum]
+
+    # Exactly-lc selection: quota-satisfying rows first, then the best
+    # leftovers (underfull boxes return surplus to the global pool).
+    final = jnp.lexsort((-priority[order], ~take))  # take=True first
+    out_idx = order[final[:lc]]
+    return x[out_idx]
+
+
+class NodeStats(NamedTuple):
+    """What each node broadcasts (Alg. 1 line 5): ⟨F_i(x), c_i⁰, N_i⟩."""
+
+    family: str
+    params: expfam.FamilyParams
+    confidence: float
+    count: int
+
+
+def distribution_aware_sample(
+    key: jax.Array,
+    shards: Sequence[Array],
+    node_stats: Sequence[NodeStats],
+    k: int,
+    allocation: str = "eq11",
+) -> Array:
+    """Alg. 2 end-to-end over explicit shards (single-host reference; the
+    mesh version lives in repro.core.distributed). Communication analogue:
+    O(k·(M−1)) sample rows cross the network.
+
+    allocation="eq11" is the paper's confidence reweighting (oversamples
+    low-confidence nodes to learn them — at the price of biasing the pivot
+    set's empirical CDF when confidences diverge); "proportional" allocates
+    k_i ∝ N_i (unbiased; isolates the stratification benefit — used by the
+    Fig. 6 ablation arm Dist-prop in benchmarks)."""
+    n_i = np.array([s.count for s in node_stats])
+    c_i = np.array([s.confidence for s in node_stats])
+    if allocation == "proportional":
+        lcs = allocate_samples(n_i, np.ones_like(c_i), k)
+    else:
+        lcs = allocate_samples(n_i, c_i, k)
+    out = []
+    for i, (shard, st) in enumerate(zip(shards, node_stats)):
+        if lcs[i] == 0:
+            continue
+        sub = jax.random.fold_in(key, i)
+        out.append(
+            stratified_local_sample(
+                sub, shard, st.params, jnp.asarray(st.confidence), int(lcs[i])
+            )
+        )
+    return jnp.concatenate(out, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Alg. 3/4: generative sampling via Gibbs over (E, C, X)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerativeModel:
+    """The broadcast global model: per-node packed params + confidence + size.
+
+    Conditionals (Eqs. 17–19):
+      p(E=i | C=c) ∝ N_i · (c_i⁰)^{−c}
+      p(X | E=i)   = f_i(X)           (the node's fitted product density)
+      p(C=1 | E=i) = c_i⁰
+    """
+
+    families: tuple[str, ...]  # per-node family name
+    packed_params: Array  # (M, 2m+1) — expfam.pack per node
+    confidence: Array  # (M,)
+    counts: Array  # (M,)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.families)
+
+
+def _node_sample(model: GenerativeModel, key: jax.Array, e: Array) -> Array:
+    """Draw x ~ f_e for traced node index e (Eq. 18). Families are static
+    python strings, so we branch with lax.switch over the distinct families."""
+    distinct = sorted(set(model.families))
+    fam_idx = jnp.asarray([distinct.index(f) for f in model.families])[e]
+
+    def make_branch(fam: str):
+        def branch(key):
+            p = expfam.unpack(model.packed_params[e], fam)
+            return expfam.sample(p, key, ())
+
+        return branch
+
+    return jax.lax.switch(fam_idx, [make_branch(f) for f in distinct], key)
+
+
+def gibbs_chain(
+    key: jax.Array,
+    model: GenerativeModel,
+    k: int,
+    oversample: float = 1.5,
+    normalize_confidence: bool = True,
+) -> tuple[Array, Array]:
+    """Alg. 4 as a fixed-length lax.scan.
+
+    Chain state (e, c); per step:
+      e ~ p(E | C=c_prev)   — categorical, weights N_i·(c_i⁰)^{−c_prev}
+      x ~ p(X | E=e)
+      c ~ p(C | E=e)        — Bernoulli(c_e⁰); x kept iff c == 1
+
+    ``normalize_confidence`` (beyond-paper fix, default on): acceptance is
+    run on c_i / max_j c_j. The C=1 branch is scale-invariant by design
+    (weights N_i/c_i x accept c_i = N_i), so this preserves Eqs. 17-19's
+    stationary mixture while keeping the acceptance rate high — without it,
+    data that fits NO exponential family (all c_i ~ 0, e.g. multimodal
+    shards) drives acceptance to ~0 and the fixed-length chain degenerates
+    to a handful of distinct pivots. Measured in EXPERIMENTS.md §Perf.
+
+    Returns (samples (k, m), acceptance_rate). Chain length is
+    L = ceil(k / c_min · oversample) so that k acceptances occur with
+    overwhelming probability; accepted draws are compacted with a stable
+    argsort and, in the (measure-zero in practice) case of a shortfall, the
+    tail repeats earlier accepted rows — never rejected ones.
+    """
+    counts = model.counts.astype(jnp.float32)
+    conf = jnp.clip(model.confidence.astype(jnp.float32), 1e-6, 1.0)
+    if normalize_confidence:
+        conf = conf / jnp.max(conf)
+    conf = jnp.clip(conf, 1e-3, 1.0)
+    c_min = float(jnp.clip(conf.min(), 0.05, 1.0))
+    length = int(np.ceil(k / c_min * oversample)) + 8
+
+    logw_c0 = jnp.log(counts)  # C=0 → weights N_i
+    logw_c1 = jnp.log(counts) - jnp.log(conf)  # C=1 → weights N_i / c_i
+
+    def step(carry, key):
+        c_prev = carry
+        k_e, k_x, k_c = jax.random.split(key, 3)
+        logw = jnp.where(c_prev == 1, logw_c1, logw_c0)
+        e = jax.random.categorical(k_e, logw)
+        x = _node_sample(model, k_x, e)
+        c = (jax.random.uniform(k_c) < conf[e]).astype(jnp.int32)
+        return c, (x, c)
+
+    _, (xs, cs) = jax.lax.scan(step, jnp.int32(1), jax.random.split(key, length))
+    accepted = cs == 1
+    # Stable compaction: accepted rows first, original order preserved.
+    order = jnp.argsort(~accepted, stable=True)
+    take = order[:k]
+    # Shortfall guard: map any non-accepted tail position onto position 0.
+    ok = accepted[take]
+    take = jnp.where(ok, take, take[0])
+    return xs[take], accepted.mean()
+
+
+def generative_sample(
+    key: jax.Array,
+    node_stats: Sequence[NodeStats],
+    k: int,
+    m: int | None = None,
+) -> tuple[Array, Array]:
+    """Alg. 3: build the broadcast model and run the Gibbs chain.
+
+    Communication analogue: only (family, η, c⁰, N) per node crosses the
+    network — O(M·(M−1)) scalars, independent of k (§4.2 cost analysis).
+    """
+    model = GenerativeModel(
+        families=tuple(s.family for s in node_stats),
+        packed_params=jnp.stack([expfam.pack(s.params) for s in node_stats]),
+        confidence=jnp.asarray([s.confidence for s in node_stats], jnp.float32),
+        counts=jnp.asarray([s.count for s in node_stats], jnp.float32),
+    )
+    return gibbs_chain(key, model, k)
+
+
+def gibbs_chain_numpy(
+    rng: np.random.Generator,
+    node_stats: Sequence[NodeStats],
+    k: int,
+) -> np.ndarray:
+    """The exact Alg. 4 loop (dynamic length, host numpy) — reference used by
+    tests to validate the fixed-shape scan against the paper's semantics."""
+    counts = np.array([s.count for s in node_stats], np.float64)
+    conf = np.clip(np.array([s.confidence for s in node_stats], np.float64), 1e-3, 1.0)
+    out: list[np.ndarray] = []
+    c_prev = 1
+    guard = 0
+    while len(out) < k and guard < 1000 * k:
+        guard += 1
+        w = counts / np.power(conf, c_prev)
+        e = rng.choice(len(counts), p=w / w.sum())
+        p = node_stats[e].params
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        x = np.asarray(expfam.sample(p, key, ()))
+        c_prev = int(rng.uniform() < conf[e])
+        if c_prev == 1:
+            out.append(x)
+    return np.stack(out)

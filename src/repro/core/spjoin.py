@@ -1,0 +1,211 @@
+"""Single-host end-to-end SP-Join (reference executor).
+
+Runs the full three-phase pipeline of Figure 1 on in-memory shards:
+
+  sampling phase — per-"node" exponential-family fit + GoF confidence
+                   (repro.core.expfam / gof), then Random / Dist / Gen pivots
+  map phase      — anchor selection, space mapping, partition tree
+                   (Iter / Learn), kernel assignment + whole membership
+  reduce phase   — per-cell V_h × W_h verification (vectorized jnp; the
+                   Pallas kernel path is exercised by repro.core.distributed)
+
+This executor keeps dynamic shapes (host loops over cells) — it is the
+*semantic reference* the distributed static-shape executor and all benchmarks
+are validated against, and it is what the paper-figure benchmarks run.
+
+Pair de-duplication rule: a result pair (i, j), i's cell = g, j's cell = h,
+is emitted by cell min(g, h) only; within one cell, both orders are present so
+we keep i < j. Lemma 4 (applied symmetrically) guarantees the pair is seen by
+both g and h, hence exactly once after the rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinConfig:
+    delta: float
+    metric: str = "l1"
+    sampler: str = "generative"  # random | distribution | generative
+    partitioner: str = "learning"  # iterative | learning
+    k: int = 1024  # sample (pivot) count; cf. required_sample_size
+    p: int = 16  # number of partitions / reducers
+    n_dims: int = 8  # target-space dimensionality n
+    t_cells: int = 8  # GoF cells per dimension
+    n_clusters: int | None = None  # labels for Learn (default: 2p)
+    anchor_method: str = "fft"  # fft | random (paper)
+    tighten: bool = True  # object-MBB tightening of whole boxes
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class JoinResult:
+    pairs: np.ndarray  # (n_pairs, 2) int64, i < j, unique
+    n_verifications: int  # Σ_h |V_h|·|W_h| actually computed
+    cost: cost_model.PartitionCost
+    node_confidences: np.ndarray
+    sample_time_s: float
+    map_time_s: float
+    verify_time_s: float
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pairs.shape[0])
+
+
+def fit_node_stats(shards: Sequence[Array], t_cells: int = 8) -> list[sampling.NodeStats]:
+    """Sampling phase stages 1–2 (Alg. 1 lines 1–4) for every node."""
+    out = []
+    for shard in shards:
+        params, res = gof.fit_best_family(jnp.asarray(shard), t=t_cells)
+        out.append(
+            sampling.NodeStats(
+                family=params.family,
+                params=params,
+                confidence=float(res.confidence),
+                count=int(shard.shape[0]),
+            )
+        )
+    return out
+
+
+def draw_pivots(
+    key: jax.Array,
+    shards: Sequence[Array],
+    node_stats: list[sampling.NodeStats],
+    cfg: JoinConfig,
+) -> Array:
+    if cfg.sampler == "random":
+        allx = jnp.concatenate([jnp.asarray(s) for s in shards], axis=0)
+        return sampling.random_sample(key, allx, cfg.k)
+    if cfg.sampler == "distribution":
+        return sampling.distribution_aware_sample(key, list(shards), node_stats, cfg.k)
+    if cfg.sampler == "generative":
+        if distances.get_metric(cfg.metric).discrete:
+            # Equality-based metrics (raw MinHash vectors) have no continuous
+            # support: a model-GENERATED pivot collides with no real
+            # signature, every distance degenerates to 1.0, and the space
+            # mapping collapses (caught by benchmarks — 100% verification
+            # rate). The paper's own string/set story (§6.2) evaluates via
+            # transformed vectors under L1 (our q-gram arm); for the MinHash
+            # extension the generative arm falls back to distribution-aware
+            # REAL samples. Flagged in DESIGN.md §limitations.
+            return sampling.distribution_aware_sample(
+                key, list(shards), node_stats, cfg.k
+            )
+        pivots, _ = sampling.generative_sample(key, node_stats, cfg.k)
+        return pivots
+    raise ValueError(f"unknown sampler {cfg.sampler!r}")
+
+
+def build_plan(
+    key: jax.Array,
+    pivots: Array,
+    cfg: JoinConfig,
+) -> tuple[partition.PartitionPlan, mapping.SpaceMap]:
+    """Map phase control plane: anchors, mapping, labels, partition tree."""
+    smap = mapping.select_anchors(key, pivots, cfg.n_dims, cfg.metric, cfg.anchor_method)
+    pivots_mapped = np.asarray(smap(pivots))
+    labels = None
+    if cfg.partitioner == "learning":
+        d = np.asarray(distances.pairwise(pivots, pivots, cfg.metric))
+        labels = partition.single_linkage_labels(d, cfg.n_clusters or 2 * cfg.p)
+    plan = partition.build_partition(
+        pivots_mapped, cfg.p, cfg.delta, strategy=cfg.partitioner, labels=labels, seed=cfg.seed
+    )
+    return plan, smap
+
+
+def join(
+    data: Array | Sequence[Array],
+    cfg: JoinConfig,
+    return_pairs: bool = True,
+    n_nodes: int = 4,
+) -> JoinResult:
+    """Self-join: all pairs with D(o_i, o_j) ≤ δ.
+
+    ``data``: either the full (N, m) array (split into ``n_nodes`` simulated
+    local nodes) or an explicit list of per-node shards.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    if isinstance(data, (list, tuple)):
+        shards = [jnp.asarray(s) for s in data]
+    else:
+        data = jnp.asarray(data)
+        shards = list(jnp.array_split(data, n_nodes))
+    allx = jnp.concatenate(shards, axis=0)
+    n_total = allx.shape[0]
+
+    # ---- sampling phase -------------------------------------------------
+    t0 = time.perf_counter()
+    k_sample, k_anchor = jax.random.split(key)
+    node_stats = fit_node_stats(shards, cfg.t_cells)
+    pivots = draw_pivots(k_sample, shards, node_stats, cfg)
+    t_sample = time.perf_counter() - t0
+
+    # ---- map phase -------------------------------------------------------
+    t0 = time.perf_counter()
+    plan, smap = build_plan(k_anchor, pivots, cfg)
+    x_mapped = smap(allx)
+    cells = partition.assign_kernel(plan, x_mapped)
+    if cfg.tighten:
+        plan = partition.tighten(plan, x_mapped, cells)
+    member = partition.whole_membership(plan, x_mapped)
+    t_map = time.perf_counter() - t0
+
+    # ---- reduce phase ----------------------------------------------------
+    t0 = time.perf_counter()
+    cells_np = np.asarray(cells)
+    member_np = np.asarray(member)
+    stats = partition.partition_stats(cells_np, member_np)
+    n_verif = 0
+    pair_chunks: list[np.ndarray] = []
+    metric = distances.get_metric(cfg.metric)
+    for h in range(cfg.p):
+        v_idx = np.flatnonzero(cells_np == h)
+        w_idx = np.flatnonzero(member_np[:, h])
+        if v_idx.size == 0 or w_idx.size == 0:
+            continue
+        n_verif += int(v_idx.size) * int(w_idx.size)
+        d = np.asarray(metric.pairwise(allx[v_idx], allx[w_idx]))
+        hit_v, hit_w = np.nonzero(d <= cfg.delta)
+        gi = v_idx[hit_v]
+        gj = w_idx[hit_w]
+        cj = cells_np[gj]
+        # De-dup rule: emit in min-cell; same-cell pairs keep i < j.
+        keep = ((cj == h) & (gi < gj)) | (cj > h)
+        if return_pairs and keep.any():
+            pair_chunks.append(np.stack([gi[keep], gj[keep]], axis=1))
+    if pair_chunks:
+        pairs = np.unique(np.sort(np.concatenate(pair_chunks), axis=1), axis=0)
+    else:
+        pairs = np.zeros((0, 2), np.int64)
+    t_verify = time.perf_counter() - t0
+
+    return JoinResult(
+        pairs=pairs.astype(np.int64),
+        n_verifications=n_verif,
+        cost=cost_model.partition_cost(stats["v_sizes"], stats["w_sizes"]),
+        node_confidences=np.array([s.confidence for s in node_stats]),
+        sample_time_s=t_sample,
+        map_time_s=t_map,
+        verify_time_s=t_verify,
+    )
+
+
+def brute_force_pairs(data: Array, delta: float, metric: str = "l1") -> np.ndarray:
+    """Ground-truth pair list for tests (quadratic; small inputs only)."""
+    mask = np.asarray(distances.brute_force_join(jnp.asarray(data), delta, metric))
+    i, j = np.nonzero(mask)
+    return np.stack([i, j], axis=1).astype(np.int64)

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic pipeline, synthetic sets, vectorizers, dedup."""
+from repro.data import dedup, pipeline, synthetic, vectorize  # noqa: F401

@@ -1,0 +1,68 @@
+"""SP-Join-powered semantic dedup — the paper's technique as an LM data
+pipeline stage (web-page dedup / entity resolution are the paper's own
+motivating applications; in an LLM data pipeline the same join runs over
+example embeddings).
+
+dedup(vectors, delta) = similarity self-join -> connected components of the
+pair graph (union-find) -> keep the lowest-index representative per
+component. The join is SP-Join (generative sampling + learning partition by
+default), so dedup inherits its scalability story; on a mesh it routes
+through core.distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import spjoin
+
+
+@dataclasses.dataclass
+class DedupResult:
+    keep_mask: np.ndarray  # (n,) bool
+    n_components: int
+    n_duplicates: int
+    pairs: np.ndarray
+
+
+class _UnionFind:
+    def __init__(self, n: int):
+        self.parent = np.arange(n)
+
+    def find(self, a: int) -> int:
+        p = self.parent
+        while p[a] != a:
+            p[a] = p[p[a]]
+            a = p[a]
+        return a
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[max(ra, rb)] = min(ra, rb)  # keep lowest index as root
+
+
+def dedup(
+    vectors: np.ndarray,
+    delta: float,
+    metric: str = "l2",
+    cfg: spjoin.JoinConfig | None = None,
+) -> DedupResult:
+    n = vectors.shape[0]
+    cfg = cfg or spjoin.JoinConfig(
+        delta=delta, metric=metric, k=min(512, max(n // 4, 16)),
+        p=8, n_dims=min(8, vectors.shape[1]),
+    )
+    res = spjoin.join(vectors, cfg)
+    uf = _UnionFind(n)
+    for i, j in res.pairs:
+        uf.union(int(i), int(j))
+    roots = np.array([uf.find(i) for i in range(n)])
+    keep = roots == np.arange(n)
+    return DedupResult(
+        keep_mask=keep,
+        n_components=int(keep.sum()),
+        n_duplicates=int(n - keep.sum()),
+        pairs=res.pairs,
+    )

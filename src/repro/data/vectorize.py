@@ -1,0 +1,82 @@
+"""String/set -> vector transforms (paper §6.2).
+
+The paper's argument: metric techniques designed for vectors transfer to
+strings/sets once an ordering/embedding maps them into a vector space. We
+ship the standard pair:
+
+  qgram_profile   string -> q-gram count vector; L1 distance on profiles
+                  lower-bounds 2q * edit distance (the classic q-gram
+                  filter), so a join at delta' = 2*q*delta is a complete
+                  candidate filter for EDIT <= delta.
+  minhash         set -> k-permutation MinHash signature; signature Hamming
+                  distance is an unbiased estimator of Jaccard distance and
+                  1 - collision_prob is itself a metric.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_P1 = np.uint64(11400714819323198485)
+_P2 = np.uint64(14029467366897019727)
+
+
+def _hash64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
+    h = x.astype(np.uint64) * _P1 + seed
+    h ^= h >> np.uint64(33)
+    h *= _P2
+    h ^= h >> np.uint64(29)
+    return h
+
+
+def qgrams(s: str, q: int = 2) -> list[str]:
+    padded = ("#" * (q - 1)) + s + ("#" * (q - 1))
+    return [padded[i : i + q] for i in range(len(padded) - q + 1)]
+
+
+def qgram_profile(strings: list[str], q: int = 2, dim: int = 64) -> np.ndarray:
+    """Hashed q-gram count vectors (n, dim) float32; L1 on these is the
+    q-gram distance (complete filter for edit distance)."""
+    out = np.zeros((len(strings), dim), np.float32)
+    for i, s in enumerate(strings):
+        for g in qgrams(s, q):
+            out[i, hash(g) % dim] += 1.0
+    return out
+
+
+def shingle_sets(strings: list[str], q: int = 3) -> list[set[int]]:
+    return [set(hash(g) & 0x7FFFFFFF for g in qgrams(s, q)) for s in strings]
+
+
+def minhash(sets: list[set[int]], k: int = 64, seed: int = 0) -> np.ndarray:
+    """(n, k) int32 MinHash signatures; mean(sig_a != sig_b) estimates
+    Jaccard distance (repro.core.distances 'jaccard_minhash')."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(1, 2**63 - 1, size=k, dtype=np.uint64)
+    out = np.zeros((len(sets), k), np.int32)
+    for i, s in enumerate(sets):
+        if not s:
+            continue
+        elems = np.fromiter(s, np.uint64, len(s))
+        for j in range(k):
+            out[i, j] = int(_hash64(elems, seeds[j]).min() & np.uint64(0x7FFFFFFF))
+    return out
+
+
+def edit_distance(a: str, b: str) -> int:
+    """Reference DP edit distance (tests verify the q-gram filter bound)."""
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        for j in range(1, lb + 1):
+            cur[j] = min(
+                prev[j] + 1, cur[j - 1] + 1, prev[j - 1] + (a[i - 1] != b[j - 1])
+            )
+        prev = cur
+    return prev[lb]
+
+
+def jaccard_distance(a: set, b: set) -> float:
+    if not a and not b:
+        return 0.0
+    return 1.0 - len(a & b) / len(a | b)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the SP-Join hot spots.
+
+  pairdist   — blocked all-pairs distance + fused threshold (verify phase,
+               space mapping). MXU path for l2/cosine/dot, VPU for l1/linf.
+  histogram  — fused per-dimension GoF cell counts (sampling stats phase).
+
+``ops`` holds the public jit'd wrappers (padding, dispatch, interpret mode on
+non-TPU backends); ``ref`` the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import histogram, pairdist, pairdist_count, pairdist_mask  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused per-dimension histogram (the GoF cell counts).
+
+The sampling-phase stats pass needs, per shard, the observed count nu_j of
+every (dimension, cell) pair under the CDF transform u = F(x) in [0,1)
+(paper Eq. 9 with equal-probability cells). Done naively this is a one-hot of
+shape (n, m, t) — n x t times the input size in HBM traffic. The kernel fuses
+binning + accumulation so only the (m, t) count matrix is ever written.
+
+Grid (m_tiles, n_tiles), n innermost: the output tile (bmm, t) accumulates in
+place across n-chunks (sequential innermost grid on TPU). Cells are compared
+against an iota instead of gathered — gather-free, VPU-only.
+
+Weights (the padding/validity mask of static-shape distributed buffers) ride
+along as a second input so masked counts need no second pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, w_ref, out_ref, *, t: int, nn: int):
+    i_n = pl.program_id(1)
+
+    @pl.when(i_n == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)  # (bn, bmm)
+    w = w_ref[...].astype(jnp.float32)  # (bn, 1)
+    cell = jnp.clip((u * t).astype(jnp.int32), 0, t - 1)  # (bn, bmm)
+    hit = (cell[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, t), 2)).astype(
+        jnp.float32
+    )
+    out_ref[...] += (hit * w[:, :, None]).sum(0)  # (bmm, t)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "bn", "bmm", "interpret"))
+def histogram_blocked(
+    u: jnp.ndarray,  # (n, m) in [0, 1), n/m padded to block multiples
+    weights: jnp.ndarray,  # (n, 1) validity mask (0 for padding rows)
+    *,
+    t: int,
+    bn: int = 256,
+    bmm: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, m = u.shape
+    bn = min(bn, n)
+    bmm = min(bmm, m)
+    assert n % bn == 0 and m % bmm == 0, (u.shape, bn, bmm)
+    grid = (m // bmm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, t=t, nn=n // bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bmm), lambda j, i: (i, j)),
+            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bmm, t), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        interpret=interpret,
+    )(u, weights)

@@ -1,0 +1,144 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles everything the raw kernels assume away: zero-padding to block
+multiples, cosine pre-normalization, backend dispatch (compiled Pallas on
+TPU, ``interpret=True`` elsewhere — the kernel body then runs as reference
+Python on CPU, which is how this container validates it), and an escape hatch
+``use_kernel=False`` that routes to the pure-jnp oracle for A/B testing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pairdist as _pairdist
+from repro.kernels import histogram as _histogram
+from repro.kernels import ref
+
+Array = jnp.ndarray
+
+METRICS = _pairdist.METRICS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _prep(x: Array, y: Array, metric: str, bv: int, bw: int, bm: int):
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; kernels support {METRICS}")
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric == "cosine":
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        y = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-12)
+    xp = _pad_to(_pad_to(x, bv, 0), bm, 1)
+    yp = _pad_to(_pad_to(y, bw, 0), bm, 1)
+    return xp, yp
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bv", "bw", "bm", "use_kernel"))
+def pairdist(
+    x: Array,
+    y: Array,
+    metric: str = "l2",
+    *,
+    bv: int = 128,
+    bw: int = 128,
+    bm: int | None = None,
+    use_kernel: bool = True,
+) -> Array:
+    """All-pairs distance matrix (a, b) float32."""
+    if not use_kernel:
+        return ref.pairdist(x, y, metric)
+    if bm is None:
+        bm = 128 if metric in _pairdist.MXU_METRICS else 16
+    a, b = x.shape[0], y.shape[0]
+    xp, yp = _prep(x, y, metric, bv, bw, bm)
+    bm = min(bm, xp.shape[1])
+    out = _pairdist.pairdist_blocked(
+        xp, yp, metric=metric, delta=None, bv=bv, bw=bw, bm=bm, interpret=_interpret()
+    )
+    return out[:a, :b]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "delta", "bv", "bw", "bm", "use_kernel")
+)
+def pairdist_mask(
+    x: Array,
+    y: Array,
+    delta: float,
+    metric: str = "l2",
+    *,
+    bv: int = 128,
+    bw: int = 128,
+    bm: int | None = None,
+    use_kernel: bool = True,
+) -> Array:
+    """Fused thresholded join mask (a, b) bool — distances never hit HBM."""
+    if not use_kernel:
+        return ref.pairdist_mask(x, y, delta, metric)
+    if bm is None:
+        bm = 128 if metric in _pairdist.MXU_METRICS else 16
+    a, b = x.shape[0], y.shape[0]
+    xp, yp = _prep(x, y, metric, bv, bw, bm)
+    bm = min(bm, xp.shape[1])
+    out = _pairdist.pairdist_blocked(
+        xp,
+        yp,
+        metric=metric,
+        delta=float(delta),
+        bv=bv,
+        bw=bw,
+        bm=bm,
+        interpret=_interpret(),
+    )
+    # Padded y-columns of an x row can false-positive (distance to the zero
+    # vector may be <= delta); the slice removes them. Padded rows likewise.
+    return out[:a, :b].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "delta", "use_kernel"))
+def pairdist_count(
+    x: Array, y: Array, delta: float, metric: str = "l2", *, use_kernel: bool = True
+) -> Array:
+    """Per-row join fan-out counts (a,) int32."""
+    return pairdist_mask(x, y, delta, metric, use_kernel=use_kernel).sum(-1).astype(
+        jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t", "bn", "bmm", "use_kernel"))
+def histogram(
+    u: Array,
+    t: int,
+    weights: Array | None = None,
+    *,
+    bn: int = 256,
+    bmm: int = 8,
+    use_kernel: bool = True,
+) -> Array:
+    """Per-dimension histogram (m, t) of CDF-space values u: (n, m)."""
+    if not use_kernel:
+        return ref.histogram(u, t, weights)
+    n, m = u.shape
+    w = jnp.ones((n, 1), jnp.float32) if weights is None else weights.reshape(n, 1)
+    bn_ = min(bn, max(n, 1))
+    up = _pad_to(_pad_to(u, bn_, 0), bmm, 1)
+    wp = _pad_to(w, bn_, 0)  # padding rows get weight 0 -> no contribution
+    out = _histogram.histogram_blocked(
+        up, wp.astype(jnp.float32), t=t, bn=bn_, bmm=min(bmm, up.shape[1]), interpret=_interpret()
+    )
+    return out[:m]

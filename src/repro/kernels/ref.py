@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function of the same name here. They are
+deliberately written in the most obvious form (no tiling, no fusion).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+METRICS = ("l1", "l2", "linf", "cosine", "dot")
+
+
+def _normalize(x: Array) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def pairdist(x: Array, y: Array, metric: str = "l2") -> Array:
+    """All-pairs distances, x: (a, m), y: (b, m) -> (a, b) float32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric == "l1":
+        return jnp.abs(x[:, None, :] - y[None, :, :]).sum(-1)
+    if metric == "linf":
+        return jnp.abs(x[:, None, :] - y[None, :, :]).max(-1)
+    if metric == "l2":
+        sq = (x * x).sum(-1)[:, None] + (y * y).sum(-1)[None, :] - 2.0 * x @ y.T
+        return jnp.sqrt(jnp.maximum(sq, 0.0))
+    if metric == "cosine":
+        return 1.0 - _normalize(x) @ _normalize(y).T
+    if metric == "dot":
+        return x @ y.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def pairdist_mask(x: Array, y: Array, delta: float, metric: str = "l2") -> Array:
+    """Thresholded join mask: (a, b) bool, True where D(x_i, y_j) <= delta."""
+    return pairdist(x, y, metric) <= delta
+
+
+def pairdist_count(x: Array, y: Array, delta: float, metric: str = "l2") -> Array:
+    """Per-row join fan-out: (a,) int32 — |{j : D(x_i, y_j) <= delta}|."""
+    return pairdist_mask(x, y, delta, metric).sum(-1).astype(jnp.int32)
+
+
+def histogram(u: Array, t: int, weights: Array | None = None) -> Array:
+    """Per-dimension equal-width histogram of u in [0, 1): (n, m) -> (m, t).
+
+    This is the GoF cell-count pass (paper Eq. 9): cell_j counts per marginal.
+    ``weights``: optional (n,) validity/padding mask.
+    """
+    cell = jnp.clip((u.astype(jnp.float32) * t).astype(jnp.int32), 0, t - 1)
+    onehot = (cell[:, :, None] == jnp.arange(t)[None, None, :]).astype(jnp.float32)
+    if weights is not None:
+        onehot = onehot * weights.astype(jnp.float32)[:, None, None]
+    return onehot.sum(0)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production mesh and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k [--multi-pod] [--out runs/dryrun.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--only-missing]
+
+Per cell this produces: per-device memory analysis (proves it fits),
+HLO FLOPs/bytes from cost_analysis (roofline numerator), and collective
+bytes parsed from the optimized HLO (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute operand sizes) — the three
+terms EXPERIMENTS.md §Roofline reports.
+
+(No ``from __future__`` here: the XLA_FLAGS assignment must be the first
+statement in the file, which PEP 236 disallows combining with futures.)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import shardings as shlib
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.models import base, transformer
+from repro.models.config import SHAPES, shape_applicable
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+def _opt_shardings(param_sh, mesh):
+    step_sh = NamedSharding(mesh, P())
+    return opt_lib.AdamState(step_sh, param_sh, param_sh, None)
+
+
+def _metrics_sh(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, profile: str = "tp",
+               param_dtype=None, remat: str | None = None,
+               n_micro: int | None = None):
+    """Returns (fn, args, in_shardings, out_shardings, meta).
+
+    profile: "tp" (default Megatron-style) or "fsdp" (hillclimb H1 —
+    "model" axis carries batch, weights pure-FSDP; right for small-d archs).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    if remat is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"skip: {why}")
+
+    rules, act_rules, profile_batch_axes = base.rules_for_profile(profile)
+    defs = transformer.model_defs(cfg)
+    aparams = base.abstract_params(defs, dtype=param_dtype)
+    param_sh = base.make_shardings(defs, mesh, rules)
+    specs = configs.input_specs(cfg, shape, abstract=True)
+
+    batch_axes = tuple(a for a in profile_batch_axes if a in mesh.axis_names)
+    n_devices_batch = int(np.prod([mesh.shape[a] for a in batch_axes]))
+
+    if shape.kind == "train":
+        if n_micro is None:
+            n_micro = max(1, shape.global_batch // n_devices_batch)
+        ocfg = opt_lib.OptConfig()
+        scfg = ts.StepConfig(n_micro=n_micro)
+        fn = ts.make_train_step(cfg, ocfg, scfg)
+        aopt = opt_lib.abstract_opt_state(aparams, ocfg)
+        opt_sh = _opt_shardings(param_sh, mesh)
+        batch = specs["batch"]
+        batch_sh = shlib.batch_shardings(batch, mesh, batch_axes)
+        args = (aparams, aopt, batch)
+        in_sh = (param_sh, opt_sh, batch_sh)
+        metrics = {
+            "loss": 0.0, "aux": 0.0, "n_tokens": 0, "grad_norm": 0.0,
+            "lr": 0.0, "total": 0.0,
+        }
+        out_sh = (param_sh, opt_sh, _metrics_sh(metrics, mesh))
+        meta = {"entry": "train_step", "n_micro": n_micro}
+    elif shape.kind == "prefill":
+        fn = ts.make_prefill_step(cfg)
+        batch = specs["batch"]
+        batch_sh = shlib.batch_shardings(batch, mesh, batch_axes)
+        args = (aparams, batch)
+        in_sh = (param_sh, batch_sh)
+        out_sh = NamedSharding(mesh, shlib.batch_spec(mesh, (shape.global_batch, 1, 1), batch_axes))
+        meta = {"entry": "prefill_step"}
+    else:  # decode
+        serve = ts.make_serve_step(cfg)
+        state = specs["state"]
+        state_sh = shlib.state_shardings(cfg, state, mesh)
+        tok_sh = NamedSharding(mesh, shlib.batch_spec(mesh, specs["token"].shape, batch_axes))
+        len_sh = NamedSharding(mesh, P())
+        args = (aparams, specs["token"], state, specs["length"])
+        in_sh = (param_sh, tok_sh, state_sh, len_sh)
+        out_sh = (tok_sh, tok_sh, state_sh)
+        fn = serve
+        meta = {"entry": "serve_step"}
+
+    meta.update(
+        mesh_shape=str(dict(mesh.shape)), chips=int(np.prod(list(mesh.shape.values()))),
+        profile=profile,
+    )
+    return mesh, fn, args, in_sh, out_sh, meta, cfg, shape, act_rules
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool = False, do_compile: bool = True,
+    profile: str = "tp", param_dtype=None, remat: str | None = None,
+    n_micro: int | None = None,
+) -> dict[str, Any]:
+    t0 = time.time()
+    mesh, fn, args, in_sh, out_sh, meta, cfg, shape, act_rules = build_cell(
+        arch, shape_name, multi_pod, profile, param_dtype, remat, n_micro
+    )
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        **meta,
+    }
+    with base.use_mesh(mesh, act_rules):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        if not do_compile:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # backend-dependent
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        # raw XLA numbers (loop bodies counted ONCE — cross-check only)
+        rec["xla_flops_unrolled_once"] = float(cost.get("flops", 0.0))
+        rec["xla_bytes_unrolled_once"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        rec["cost_error"] = str(e)
+
+    try:
+        from repro.launch import hloparse
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        parsed = hloparse.analyze(hlo)
+        rec["flops_per_device"] = parsed["flops_per_device"]
+        rec["coll_bytes_per_device"] = parsed["collective_wire_bytes_per_device"]
+        rec["coll_breakdown"] = {
+            k: float(v) for k, v in parsed["collective_breakdown"].items()
+        }
+        rec["dot_traffic_per_device"] = parsed["dot_traffic_bytes_per_device"]
+        rec["fusion_traffic_per_device"] = parsed["traffic_bytes_per_device"]
+        rec["top_flop_computations"] = [
+            [n[:60], float(f)] for n, f in parsed["top_flop_computations"][:4]
+        ]
+    except Exception as e:
+        rec["parse_error"] = str(e) + traceback.format_exc()[-800:]
+
+    # roofline terms — per device, per step (module is the per-device program)
+    chips = rec["chips"]
+    if "flops_per_device" in rec:
+        terms = {
+            "compute_s": rec["flops_per_device"] / V5E.peak_flops,
+            "memory_s": rec["dot_traffic_per_device"] / V5E.hbm_bw,
+            "collective_s": rec["coll_bytes_per_device"] / V5E.ici_bw,
+        }
+        rec["roofline"] = {k: float(v) for k, v in terms.items()}
+        rec["roofline"]["bottleneck"] = max(terms, key=lambda k: terms[k])
+        step_s = max(terms.values())
+        total, active = cfg.n_params_active
+        tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+        fmult = 6 if shape.kind == "train" else 2
+        rec["model_flops"] = float(fmult * active * tokens)
+        hlo_total_flops = rec["flops_per_device"] * chips
+        rec["useful_flops_ratio"] = (
+            rec["model_flops"] / hlo_total_flops if hlo_total_flops else None
+        )
+        # roofline fraction: useful model FLOP/s achieved at the predicted
+        # step time vs mesh peak
+        rec["mfu_bound"] = (
+            rec["model_flops"] / (step_s * chips * V5E.peak_flops)
+            if step_s > 0
+            else None
+        )
+        rec["params_total"] = total
+        rec["params_active"] = active
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--profile", default="tp", choices=["tp", "fsdp", "fsdp_sp"])
+    ap.add_argument("--param-dtype", default=None, choices=[None, "bfloat16"])
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--out", default="runs/dryrun.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done: set[tuple[str, str, str]] = set()
+    if args.only_missing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for a, s, ok, why in configs.all_cells():
+            for mp in (False, True):
+                if ok:
+                    cells.append((a, s, mp))
+                else:
+                    print(f"SKIP {a} x {s}: {why}")
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    with open(args.out, "a") as f:
+        for a, s, mp in cells:
+            mesh_name = "multi_pod" if mp else "single_pod"
+            if (a, s, mesh_name) in done:
+                continue
+            print(f"=== {a} x {s} [{mesh_name}] ===", flush=True)
+            try:
+                rec = run_cell(a, s, mp, do_compile=not args.no_compile,
+                               profile=args.profile,
+                               param_dtype=jnp.bfloat16 if args.param_dtype else None,
+                               remat=args.remat, n_micro=args.n_micro)
+                print(
+                    f"    flops/dev={rec.get('flops_per_device', 0):.3e} "
+                    f"coll/dev={rec.get('coll_bytes_per_device', 0):.3e} "
+                    f"bottleneck={rec.get('roofline', {}).get('bottleneck')} "
+                    f"mfu_bound={rec.get('mfu_bound')} [{rec.get('total_s')}s]",
+                    flush=True,
+                )
+                if rec.get("memory"):
+                    print(f"    memory={rec['memory']}", flush=True)
+            except Exception as e:
+                rec = {
+                    "arch": a, "shape": s, "mesh": mesh_name,
+                    "error": str(e), "traceback": traceback.format_exc()[-2000:],
+                }
+                print(f"    ERROR: {e}", flush=True)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --reduced --batch 4 --prompt-len 32 --gen 32
+
+Production shape: requests are padded into a fixed (batch, max_len) slab;
+prefill runs the full-sequence forward, the KV/SSM state is materialized by
+replaying tokens through ``decode_step`` (prefill-by-decode keeps state
+layouts identical between phases, which is what makes the decode_* dry-run
+cells representative), then greedy/temperature decode streams tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import base, transformer
+from repro.train import train_step as ts
+
+
+def prefill_by_decode(params, tokens, cfg, state, serve_step):
+    """Feed prompt tokens one step at a time (exact state, any family)."""
+    B, T = tokens.shape
+    for t in range(T):
+        _, _, state = serve_step(params, tokens[:, t : t + 1], state, jnp.int32(t))
+    return state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    if cfg.is_encoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+
+    defs = transformer.model_defs(cfg)
+    params = base.init_params(jax.random.PRNGKey(0), defs)
+    max_len = args.prompt_len + args.gen
+    state = transformer.init_state(cfg, args.batch, max_len)
+
+    mode = "greedy" if args.temperature == 0.0 else "temp"
+    serve_step = jax.jit(
+        ts.make_serve_step(cfg, "greedy" if mode == "greedy" else "sample",
+                           max(args.temperature, 1e-3))
+    )
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+
+    t0 = time.time()
+    state = prefill_by_decode(params, prompts, cfg, state, serve_step)
+    t_prefill = time.time() - t0
+
+    tok = prompts[:, -1:]
+    out = []
+    t0 = time.time()
+    for i in range(args.gen):
+        tok, _, state = serve_step(
+            params, tok, state, jnp.int32(args.prompt_len + i)
+        )
+        out.append(np.asarray(tok)[:, 0])
+    t_decode = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decode {args.gen} steps in {t_decode:.2f}s "
+          f"({args.batch * args.gen / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sample output ids:", gen[0][:16])
+    assert gen.shape == (args.batch, args.gen)
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Explicit sharding assignment for every entry-point operand.
+
+The dry-run lowers with fully explicit in_shardings/out_shardings so the
+compiled memory/collective profile is deterministic and auditable — nothing
+is left to propagation defaults. Params use the logical rules in
+models/base.py; batches shard their leading (global-batch) dim over
+("pod","data"); decode states get per-family treatment here.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+def _axes(mesh: Mesh, names: tuple[str, ...]) -> tuple[str, ...]:
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def _div(dim: int, mesh: Mesh, names: tuple[str, ...]) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in names])) if names else 1
+    return size > 1 and dim % size == 0
+
+
+def batch_spec(
+    mesh: Mesh, shape: tuple[int, ...], batch_axes: tuple[str, ...] = ("pod", "data")
+) -> P:
+    """Shard dim 0 over the profile's batch axes when divisible, else
+    replicate. FSDP-profile archs put "model" in batch_axes too."""
+    bd = _axes(mesh, batch_axes)
+    if shape and _div(shape[0], mesh, bd):
+        return P(bd if len(bd) > 1 else bd[0])
+    return P()
+
+
+def batch_shardings(
+    batch: PyTree, mesh: Mesh, batch_axes: tuple[str, ...] = ("pod", "data")
+) -> PyTree:
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(mesh, x.shape, batch_axes)), batch
+    )
+
+
+def _model_dim_spec(shape, batch_idx, model_candidates, mesh):
+    """P with batch on batch_idx and 'model' on the first candidate dim that
+    divides; remaining dims replicated."""
+    bd = _axes(mesh, ("pod", "data"))
+    spec: list = [None] * len(shape)
+    if batch_idx is not None and _div(shape[batch_idx], mesh, bd):
+        spec[batch_idx] = bd if len(bd) > 1 else bd[0]
+    if "model" in mesh.axis_names:
+        for c in model_candidates:
+            if c != batch_idx and c < len(shape) and shape[c] % mesh.shape["model"] == 0 and shape[c] > 1:
+                spec[c] = "model"
+                break
+    return P(*spec)
+
+
+def state_shardings(cfg: ArchConfig, state_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Decode-state shardings keyed by the init_state tree structure.
+
+    KV caches (…, B, S, KV, hd): batch over ("pod","data"); KV heads over
+    "model" when they divide (GQA), else the SEQUENCE dim (MQA — per-rank
+    partial softmax, psum'd by SPMD). SSD/conv/mLSTM states shard their
+    head or feature dim over "model".
+    """
+
+    def assign(path, leaf):
+        keys = [getattr(pp, "key", getattr(pp, "name", "")) for pp in path]
+        shape = leaf.shape
+        nd = len(shape)
+        if "kv" in keys or "kv0" in keys or ("k" in keys or "v" in keys):
+            # (L?, B, S, KV, hd) or (B, S, KV, hd) [or (groups, B, S, KV, hd)]
+            b_idx = nd - 4
+            kv_idx, s_idx = nd - 2, nd - 3
+            if shape[kv_idx] % mesh.shape.get("model", 1) == 0 and shape[kv_idx] > 1:
+                return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (kv_idx,), mesh))
+            return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (s_idx,), mesh))
+        if "ssd" in keys:  # (g, per, B, H, N, P) or (B, H, N, P)
+            b_idx = nd - 4
+            return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (nd - 3,), mesh))
+        if "conv" in keys:  # (g, per, B, W-1, C)
+            b_idx = nd - 3
+            return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (nd - 1,), mesh))
+        if "mlstm" in keys:  # (g, per, B, H, dk, dv+1)
+            b_idx = nd - 4
+            return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (nd - 3, nd - 2), mesh))
+        if "slstm" in keys:  # (g, B, H, dh)
+            b_idx = nd - 3
+            return NamedSharding(mesh, _model_dim_spec(shape, b_idx, (nd - 2, nd - 1), mesh))
+        # fallback: replicate
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, state_shapes)

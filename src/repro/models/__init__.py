@@ -1,0 +1,12 @@
+"""Model zoo: the 10 assigned architectures as one composable stack.
+
+  base         — ParamDef system, logical sharding rules, shard_act
+  config       — ArchConfig / ShapeConfig / skip rules
+  layers       — norms, RoPE, MLP, embeddings
+  attention    — chunked (flash-style) GQA + cached decode
+  moe          — capacity-bounded expert dispatch (llama4 / deepseek)
+  ssm          — Mamba2 (SSD) + the shared chunked linear-recurrence engine
+  xlstm        — mLSTM (matrix memory) + sLSTM (recurrent scan)
+  transformer  — assembly: forward / init_state / decode_step per family
+"""
+from repro.models import attention, base, config, layers, moe, ssm, transformer, xlstm  # noqa: F401

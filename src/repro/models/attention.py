@@ -1,0 +1,273 @@
+"""GQA attention: chunked (flash-style) training/prefill + cached decode.
+
+Memory is the design constraint at 32k prefill: a materialized (S, S) score
+matrix per head is gigabytes, so full-sequence attention runs as a two-level
+``lax.scan`` (outer: query chunks, inner: KV chunks) carrying the online-
+softmax state (m, l, acc) — the standard flash recurrence, in pure JAX so XLA
+pipelines it on any backend.
+
+Two causal schedules (see EXPERIMENTS.md §Perf for the measured delta):
+
+  "rect"       inner scan covers all KV chunks, causality by masking.
+               Simple, but compiles the full S^2 rectangle of block matmuls —
+               2x the useful FLOPs of causal attention.
+  "blocklist"  scan over the static list of lower-triangular (qi, kj) block
+               pairs (ordered row-major, so per-q-chunk online softmax stays
+               sequential); dynamic-slice the chunks, scatter the state. HLO
+               FLOPs = the causal triangle only. This is the optimized
+               schedule; the dry-run cost analysis is how we validated the
+               ~2x compute-term drop.
+
+Decode reads the full cache with a length mask — one (B, H, S) logits tensor,
+no chunking needed (S-sharded cache + SPMD softmax handles the MQA case where
+KV heads cannot split over the model axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.base import pdef, shard_act
+
+Array = jnp.ndarray
+
+NEG = -2.0e38
+
+
+def attn_defs(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "wq": pdef((d, H * hd), ("embed", "heads"), init="scaled"),
+        "wk": pdef((d, KV * hd), ("embed", "kv"), init="scaled"),
+        "wv": pdef((d, KV * hd), ("embed", "kv"), init="scaled"),
+        "wo": pdef((H * hd, d), ("heads", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = pdef((H * hd,), ("heads",), init="zeros")
+        out["bk"] = pdef((KV * hd,), ("kv",), init="zeros")
+        out["bv"] = pdef((KV * hd,), ("kv",), init="zeros")
+    return out
+
+
+def _project_qkv(params, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block(qc_, kc_, vc_, mask, scale):
+    """One flash block: returns (m, l, acc) contribution.
+
+    qc_: (B, qc, KV, G, hd); kc_/vc_: (B, kc, KV, hd); mask: (qc, kc) bool.
+    """
+    logits = jnp.einsum(
+        "bqkgd,bskd->bqkgs", qc_, kc_, preferred_element_type=jnp.float32
+    ) * scale
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG)
+    m = logits.max(-1)  # (B, qc, KV, G)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(vc_.dtype), vc_)
+    return m, l, acc.astype(jnp.float32)
+
+
+def _merge(state, m2, l2, a2):
+    m1, l1, a1 = state
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def chunked_attention(
+    q: Array,  # (B, S, H, hd)
+    k: Array,  # (B, S, KV, hd)
+    v: Array,
+    *,
+    causal: bool,
+    q_chunk: int,
+    kv_chunk: int,
+    causal_mode: str = "blocklist",
+) -> Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+    nq, nk = S // qc, S // kc
+
+    qr = q.reshape(B, nq, qc, KV, G, hd)
+    kr = k.reshape(B, nk, kc, KV, hd)
+    vr = v.reshape(B, nk, kc, KV, hd)
+    q_pos = jnp.arange(S).reshape(nq, qc)
+    k_pos = jnp.arange(S).reshape(nk, kc)
+
+    if not causal or causal_mode == "rect":
+
+        def outer(qi):
+            def inner(state, kj):
+                mask = (
+                    (k_pos[kj][None, :] <= q_pos[qi][:, None])
+                    if causal
+                    else jnp.ones((qc, kc), bool)
+                )
+                blk = _block(qr[:, qi], kr[:, kj], vr[:, kj], mask, scale)
+                return _merge(state, *blk), None
+
+            init = (
+                jnp.full((B, qc, KV, G), NEG, jnp.float32),
+                jnp.zeros((B, qc, KV, G), jnp.float32),
+                jnp.zeros((B, qc, KV, G, hd), jnp.float32),
+            )
+            (m, l, acc), _ = jax.lax.scan(inner, init, jnp.arange(nk))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out = jax.lax.map(outer, jnp.arange(nq))  # (nq, B, qc, KV, G, hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, KV, G, hd)
+        return out.reshape(B, S, H, hd).astype(q.dtype)
+
+    # ---- blocklist: causal triangle only --------------------------------
+    assert qc == kc, "blocklist schedule wants q_chunk == kv_chunk"
+    pairs = np.array(
+        [(qi, kj) for qi in range(nq) for kj in range(qi + 1)], np.int32
+    )  # row-major: all kj of one qi are consecutive -> softmax state is local
+
+    def step(carry, pair):
+        m_all, l_all, acc_all = carry  # (nq, B, qc, KV, G[, hd])
+        qi, kj = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qr, qi, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+        on_diag = qi == kj
+        tri = jnp.tril(jnp.ones((qc, kc), bool))
+        mask = jnp.where(on_diag, tri, jnp.ones((qc, kc), bool))
+        m2, l2, a2 = _block(qblk, kblk, vblk, mask, scale)
+        st = (
+            jax.lax.dynamic_index_in_dim(m_all, qi, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(l_all, qi, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(acc_all, qi, 0, keepdims=False),
+        )
+        m, l, acc = _merge(st, m2, l2, a2)
+        return (
+            jax.lax.dynamic_update_index_in_dim(m_all, m, qi, 0),
+            jax.lax.dynamic_update_index_in_dim(l_all, l, qi, 0),
+            jax.lax.dynamic_update_index_in_dim(acc_all, acc, qi, 0),
+        ), None
+
+    init = (
+        jnp.full((nq, B, qc, KV, G), NEG, jnp.float32),
+        jnp.zeros((nq, B, qc, KV, G), jnp.float32),
+        jnp.zeros((nq, B, qc, KV, G, hd), jnp.float32),
+    )
+    (m_all, l_all, acc_all), _ = jax.lax.scan(step, init, jnp.asarray(pairs))
+    out = acc_all / jnp.maximum(l_all, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, KV, G, hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (batch, max_len, KV, hd)
+    # Shard KV heads over the model axis when they divide; otherwise shard
+    # the sequence (MQA: per-rank partial softmax, combined by SPMD psum).
+    axes = ("act_batch", None, "act_model", None)
+    cache = {
+        "k": shard_act(jnp.zeros(shape, dtype), axes),
+        "v": shard_act(jnp.zeros(shape, dtype), axes),
+    }
+    return cache
+
+
+def decode_attention(
+    params: dict,
+    x: Array,  # (B, 1, d)
+    cache: dict,
+    length: Array,  # scalar int32 — tokens already in cache
+    cfg,
+) -> tuple[Array, dict]:
+    B, S1, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    positions = jnp.broadcast_to(length, (B, 1))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+    S = k_cache.shape[1]
+
+    qg = q.reshape(B, KV, G, hd)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) / np.sqrt(hd)
+    valid = jnp.arange(S)[None, None, None, :] <= length
+    logits = jnp.where(valid, logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    o = o.reshape(B, 1, H * hd)
+    y = o @ params["wo"].astype(o.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Full block entry point
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    params: dict,
+    x: Array,  # (B, S, d)
+    cfg,
+    *,
+    positions: Array | None = None,
+    cache: dict | None = None,
+    cache_length: Array | None = None,
+    causal_mode: str = "blocklist",
+) -> tuple[Array, dict | None]:
+    """Self-attention sub-block (no residual, no norm — the caller owns those).
+
+    Returns (output (B, S, d), updated cache or None)."""
+    if cache is not None:
+        return decode_attention(params, x, cache, cache_length, cfg)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    y = chunked_attention(
+        q,
+        k,
+        v,
+        causal=cfg.causal,
+        q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk,
+        causal_mode=causal_mode,
+    )
+    y = y.reshape(B, S, cfg.n_heads * cfg.hd)
+    return y @ params["wo"].astype(y.dtype), None

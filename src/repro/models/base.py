@@ -1,0 +1,226 @@
+"""Parameter system + logical sharding for the model zoo.
+
+No flax in this environment, so models are pure functions over nested-dict
+pytrees. Each model builds a tree of ``ParamDef`` (shape + logical axes +
+initializer); three interpreters consume it:
+
+  init_params        — materialize real arrays (smoke tests, examples)
+  abstract_params    — ShapeDtypeStruct tree (dry-run: zero allocation)
+  make_shardings     — NamedSharding tree: logical axis names -> mesh axes
+                       via LOGICAL_RULES, with divisibility fallback (a dim
+                       that doesn't divide the mesh axis is replicated, never
+                       mis-sharded — e.g. hubert's 504-way vocab head).
+
+Logical axis vocabulary (MaxText-style):
+  "embed"    d_model dims           -> FSDP axis ("data")   [weights]
+  "mlp"      FFN hidden dims        -> TP axis ("model")
+  "heads"    attention-head dims    -> TP axis ("model")
+  "kv"       KV-head dims           -> TP axis ("model") when divisible
+  "vocab"    vocabulary dims        -> TP axis ("model")
+  "experts"  MoE expert dim         -> TP/EP axis ("model")
+  "layers"   scan-stacked layer dim -> replicated (scan carries it)
+  None       replicated
+
+Activations use ``shard_act`` with its own vocabulary ("act_batch" ->
+("pod", "data"), "act_model" -> "model").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jnp.ndarray
+PyTree = Any
+
+LOGICAL_RULES: dict[str, str | tuple[str, ...]] = {
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,  # type: ignore[dict-item]
+    "conv": None,  # type: ignore[dict-item]
+}
+
+# FSDP profile (hillclimb H1, EXPERIMENTS.md §Perf): small-d models waste the
+# mesh on tensor parallelism — per-layer activation all-reduces dwarf their
+# compute. Here the "model" axis carries BATCH instead; weights shard one dim
+# over both axes (pure FSDP/ZeRO-3) and the only collectives left are the
+# per-layer param all-gather + gradient reduce-scatter.
+FSDP_RULES: dict[str, str | tuple[str, ...]] = {
+    "embed": ("data", "model"),
+    "mlp": None,  # type: ignore[dict-item]
+    "heads": None,  # type: ignore[dict-item]
+    "kv": None,  # type: ignore[dict-item]
+    "vocab": ("data", "model"),
+    "experts": ("data", "model"),
+    "layers": None,  # type: ignore[dict-item]
+    "conv": None,  # type: ignore[dict-item]
+}
+
+ACT_RULES: dict[str, str | tuple[str, ...]] = {
+    "act_batch": ("pod", "data"),
+    "act_model": "model",
+    "act_seq": "data",  # sequence sharding (long-context decode)
+}
+
+FSDP_ACT_RULES: dict[str, str | tuple[str, ...]] = {
+    "act_batch": ("pod", "data", "model"),
+    "act_model": None,  # type: ignore[dict-item]
+    "act_seq": None,  # type: ignore[dict-item]
+}
+
+# Sequence-parallel FSDP (multi-pod trains where global_batch < chip count:
+# 256 examples cannot shard over 512 chips, so the model axis shards the
+# SEQUENCE instead; weights stay ZeRO-3 over (data, model)).
+FSDP_SP_ACT_RULES: dict[str, str | tuple[str, ...]] = {
+    "act_batch": ("pod", "data"),
+    "act_model": None,  # type: ignore[dict-item]
+    "act_seq": "model",
+}
+
+
+def rules_for_profile(profile: str):
+    """(param_rules, act_rules, batch_axes) per sharding profile."""
+    if profile == "fsdp":
+        return FSDP_RULES, FSDP_ACT_RULES, ("pod", "data", "model")
+    if profile == "fsdp_sp":
+        return FSDP_RULES, FSDP_SP_ACT_RULES, ("pod", "data")
+    return LOGICAL_RULES, ACT_RULES, ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def pdef(shape, axes, init="normal", scale=0.02, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(key: jax.Array, defs: PyTree, dtype=None) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(k, d: ParamDef):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "scaled":  # fan-in scaled normal
+            fan_in = d.shape[0] if len(d.shape) >= 2 else 1
+            return (jax.random.normal(k, d.shape) / np.sqrt(max(fan_in, 1))).astype(dt)
+        return (jax.random.normal(k, d.shape) * d.scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def spec_for(d: ParamDef, mesh: Mesh, rules=None) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback. At most one
+    mesh axis is assigned once (first logical dim wins on conflict)."""
+    rules = rules or LOGICAL_RULES
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(d.shape, d.axes):
+        phys = rules.get(name) if name else None
+        if phys is None:
+            out.append(None)
+            continue
+        ax_names = (phys,) if isinstance(phys, str) else tuple(phys)
+        ax_names = tuple(a for a in ax_names if a in mesh.axis_names and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in ax_names])) if ax_names else 1
+        if ax_names and dim % size == 0:
+            out.append(ax_names[0] if len(ax_names) == 1 else ax_names)
+            used.update(ax_names)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def make_shardings(defs: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(d, mesh, rules)), defs, is_leaf=_is_def
+    )
+
+
+def make_pspecs(defs: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    return jax.tree.map(lambda d: spec_for(d, mesh, rules), defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH: list[tuple[Mesh | None, dict]] = [(None, ACT_RULES)]
+
+
+class use_mesh:
+    """Context manager: makes shard_act constraints bind to this mesh (and
+    optionally a profile's activation rules)."""
+
+    def __init__(self, mesh: Mesh | None, act_rules: dict | None = None):
+        self.entry = (mesh, act_rules or ACT_RULES)
+
+    def __enter__(self):
+        _CURRENT_MESH.append(self.entry)
+        return self.entry[0]
+
+    def __exit__(self, *exc):
+        _CURRENT_MESH.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _CURRENT_MESH[-1][0]
+
+
+def current_act_rules() -> dict:
+    return _CURRENT_MESH[-1][1]
+
+
+def shard_act(x: Array, axes: tuple[str | None, ...]) -> Array:
+    """with_sharding_constraint by logical activation axes; no-op without a
+    mesh (single-device smoke tests) or when a dim doesn't divide."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    act_rules = current_act_rules()
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(x.shape, axes):
+        phys = act_rules.get(name) if name else None
+        if phys is None:
+            out.append(None)
+            continue
+        ax_names = (phys,) if isinstance(phys, str) else tuple(phys)
+        ax_names = tuple(a for a in ax_names if a in mesh.axis_names and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in ax_names])) if ax_names else 1
+        if ax_names and dim % size == 0 and dim > 0:
+            out.append(ax_names if len(ax_names) > 1 else ax_names[0])
+            used.update(ax_names)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))

@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, RoPE, linear/MLP blocks (pure functions).
+
+Convention: every layer is a pair (``<name>_defs(cfg) -> ParamDef tree``,
+``<name>(params, x, ...) -> y``). Computation runs in ``cfg.act_dtype``
+(bf16 by default) with fp32 norms/softmax — the long-reduction rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDef, pdef
+
+Array = jnp.ndarray
+
+
+def act_dt(cfg):
+    return jnp.bfloat16 if cfg.act_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": pdef((d,), (None,), init="ones")}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """Rotary embedding. x: (..., S, n_heads, head_dim), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+
+
+def linear_defs(d_in: int, d_out: int, axes=("embed", "mlp"), bias=False) -> dict:
+    out = {"w": pdef((d_in, d_out), axes, init="scaled")}
+    if bias:
+        out["b"] = pdef((d_out,), (axes[1],), init="zeros")
+    return out
+
+
+def linear(params: dict, x: Array) -> Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def mlp_defs(cfg, d_ff: int | None = None) -> dict:
+    d, dff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "gate": linear_defs(d, dff, ("embed", "mlp")),
+            "up": linear_defs(d, dff, ("embed", "mlp")),
+            "down": linear_defs(dff, d, ("mlp", "embed")),
+        }
+    return {
+        "up": linear_defs(d, dff, ("embed", "mlp")),
+        "down": linear_defs(dff, d, ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: Array, kind: str = "swiglu") -> Array:
+    if kind == "swiglu":
+        g = linear(params["gate"], x)
+        u = linear(params["up"], x)
+        return linear(params["down"], jax.nn.silu(g) * u)
+    return linear(params["down"], jax.nn.gelu(linear(params["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg) -> dict:
+    out = {"tokens": pdef((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["unembed"] = pdef((cfg.d_model, cfg.vocab), ("embed", "vocab"), init="scaled")
+    return out
+
+
+def embed(params: dict, tokens: Array, cfg) -> Array:
+    return params["tokens"].astype(act_dt(cfg))[tokens]
+
+
+def unembed(params: dict, x: Array, cfg) -> Array:
+    if cfg.tie_embeddings:
+        w = params["tokens"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = x @ w
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c).astype(logits.dtype)
+    return logits

@@ -1,0 +1,206 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) + generic machinery.
+
+``chunked_linear_recurrence`` is the shared engine: it computes
+
+    y_i = q_i . ( sum_{j<=i} exp(cum_i - cum_j) * k_j (x) v_j )
+
+for per-head log-decays <= 0 — the SSD dual form of Mamba2 *and* (with the
+input gate folded into k) the chunkwise mLSTM of xLSTM. Chunked evaluation:
+intra-chunk is a masked decay-weighted attention matmul (MXU work), inter-
+chunk is a tiny scan carrying the (H, dk, dv) state — O(S) time, O(chunk^2)
+memory, numerically safe because every exponent is <= 0.
+
+Decode is the O(1) recurrent step on the same state, so prefill -> decode
+handoff is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.base import pdef, shard_act
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Generic chunked linear recurrence (SSD dual form)
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_recurrence(
+    q: Array,  # (B, S, H, dk)
+    k: Array,  # (B, S, H, dk)
+    v: Array,  # (B, S, H, dv)
+    log_decay: Array,  # (B, S, H), <= 0; step i decays state *before* adding k_i(x)v_i
+    chunk: int = 128,
+    state0: Array | None = None,  # (B, H, dk, dv)
+) -> tuple[Array, Array]:
+    """Returns (y (B, S, H, dv), final_state (B, H, dk, dv))."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+
+    qr = q.reshape(B, nC, Q, H, dk)
+    kr = k.reshape(B, nC, Q, H, dk)
+    vr = v.reshape(B, nC, Q, H, dv)
+    ar = log_decay.reshape(B, nC, Q, H).astype(jnp.float32)
+    cum = jnp.cumsum(ar, axis=2)  # (B, nC, Q, H) inclusive of own decay
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def step(state, c):
+        qc = qr[:, c].astype(jnp.float32)
+        kc = kr[:, c].astype(jnp.float32)
+        vc = vr[:, c].astype(jnp.float32)
+        cc = cum[:, c]  # (B, Q, H)
+        last = cc[:, -1]  # (B, H)
+
+        # intra-chunk: scores (B, H, Q, Q) with decay weights exp(cc_i - cc_j)
+        scores = jnp.einsum("bihd,bjhd->bhij", qc, kc)
+        decay = jnp.exp(cc[:, :, None, :] - cc[:, None, :, :])  # (B, i, j, H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(tri[None, :, :, None], decay, 0.0)
+        y_diag = jnp.einsum("bhij,bijh,bjhv->bihv", scores, w, vc)
+
+        # inter-chunk: read old state, then fold this chunk into it
+        y_off = jnp.einsum("bihd,bhdv->bihv", qc * jnp.exp(cc)[..., None], state)
+        write = jnp.exp(last[:, None, :] - cc)  # (B, Q, H) decay to chunk end
+        state = state * jnp.exp(last)[:, :, None, None] + jnp.einsum(
+            "bjhd,bjh,bjhv->bhdv", kc, write, vc
+        )
+        return state, (y_diag + y_off).astype(v.dtype)
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(nC))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)
+    return y, state
+
+
+def linear_recurrence_step(
+    state: Array,  # (B, H, dk, dv)
+    q: Array,  # (B, H, dk)
+    k: Array,
+    v: Array,  # (B, H, dv)
+    log_decay: Array,  # (B, H)
+) -> tuple[Array, Array]:
+    """One decode step; state is decayed then written, matching the chunked
+    form's inclusive cumsum."""
+    a = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return {
+        "in_proj": pdef((d, 2 * d_in + 2 * N + H), ("embed", "mlp"), init="scaled"),
+        "conv_w": pdef((cfg.conv_width, conv_dim), (None, "mlp"), init="scaled", scale=0.5),
+        "conv_b": pdef((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": pdef((H,), ("heads",), init="zeros"),
+        "D": pdef((H,), ("heads",), init="ones"),
+        "dt_bias": pdef((H,), ("heads",), init="zeros"),
+        "norm": layers.rmsnorm_defs(d_in),
+        "out_proj": pdef((d_in, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _split_inproj(cfg, zxbcdt: Array):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N :]  # (..., H)
+    return z, xbc, dt, d_in, H, N
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv over (B, S, C). state: (B, W-1, C) history."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(W)
+    ) + b.astype(xbc.dtype)
+    new_state = full[:, -(W - 1) :] if W > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(
+    params: dict,
+    x: Array,  # (B, S, d)
+    cfg,
+    *,
+    state: dict | None = None,  # {"conv": (B,W-1,C), "ssd": (B,H,N,P)}
+) -> tuple[Array, dict | None]:
+    """Mamba2 sub-block (no residual). Decode when S == 1 and state given."""
+    B, S, d = x.shape
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt, d_in, H, N = _split_inproj(cfg, zxbcdt)
+    P = cfg.ssm_head_dim
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs = xbc[..., :d_in].reshape(B, S, H, P)
+    Bmat = xbc[..., d_in : d_in + N]  # (B, S, N) shared across heads (MVA)
+    Cmat = xbc[..., d_in + N :]  # (B, S, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) < 0
+    log_decay = dt * a  # (B, S, H) <= 0
+    xbar = xs.astype(jnp.float32) * dt[..., None]
+
+    kq_k = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N))
+    kq_q = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N))
+
+    if state is None:
+        y, ssd_state = chunked_linear_recurrence(
+            kq_q, kq_k, xbar, log_decay, chunk=128
+        )
+        new_state = {"conv": new_conv, "ssd": ssd_state}
+    else:
+        yv, ssd_state = linear_recurrence_step(
+            state["ssd"], kq_q[:, 0], kq_k[:, 0], xbar[:, 0], log_decay[:, 0]
+        )
+        y = yv[:, None]
+        new_state = {"conv": new_conv, "ssd": ssd_state}
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(x.dtype), new_state
+
+
+def mamba2_state_init(cfg, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return {
+        "conv": shard_act(
+            jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.bfloat16),
+            ("act_batch", None, "act_model"),
+        ),
+        "ssd": shard_act(
+            jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+            ("act_batch", "act_model", None, None),
+        ),
+    }

@@ -1,0 +1,367 @@
+"""Model assembly: every assigned architecture as one composable stack.
+
+Families share a skeleton — embed -> scanned residual blocks -> final norm ->
+unembed — and differ only in the block body:
+
+  dense / vlm / audio   pre-norm GQA attention + (Swi)GLU MLP
+  moe                   attention + capacity-dispatch MoE (optional dense L0)
+  hybrid (zamba2)       Mamba2 backbone; a weight-SHARED attention+MLP block
+                        is applied after every ``shared_attn_every`` layers
+                        (outer scan over groups, inner scan over Mamba layers)
+  ssm (xlstm)           groups of (slstm_every - 1) mLSTM + 1 sLSTM
+
+Layers are scan-stacked (leading "layers" axis on every layer param) so an
+88-layer model lowers as one rolled loop — compile time and HLO size stay
+flat in depth. ``cfg.remat`` wraps the scan body in jax.checkpoint.
+
+Three entry points, matching the assigned shape kinds:
+  forward()      full-sequence logits (train / prefill)
+  init_state()   decode cache pytree (KV caches / SSM states / conv states)
+  decode_step()  one token in, one token out, state updated in place
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm, xlstm
+from repro.models.base import ParamDef, pdef, shard_act
+from repro.models.config import ArchConfig
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param-def construction
+# ---------------------------------------------------------------------------
+
+
+def _stack_defs(defs: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _attn_layer_defs(cfg) -> dict:
+    return {
+        "attn_norm": layers.rmsnorm_defs(cfg.d_model),
+        "attn": attention.attn_defs(cfg),
+        "mlp_norm": layers.rmsnorm_defs(cfg.d_model),
+        "mlp": layers.mlp_defs(cfg),
+    }
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs: dict = {"embed": layers.embed_defs(cfg), "final_norm": layers.rmsnorm_defs(d)}
+
+    if cfg.frontend == "audio_frames":
+        defs["frontend_proj"] = layers.linear_defs(cfg.frontend_dim, d, ("conv", "embed"))
+    if cfg.frontend == "vision_patches":
+        defs["patch_proj"] = layers.linear_defs(cfg.frontend_dim, d, ("conv", "embed"))
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        defs["layers"] = _stack_defs(_attn_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.first_layer_dense else 0)
+        moe_layer = {
+            "attn_norm": layers.rmsnorm_defs(d),
+            "attn": attention.attn_defs(cfg),
+            "mlp_norm": layers.rmsnorm_defs(d),
+            "moe": moe.moe_defs(cfg),
+        }
+        defs["layers"] = _stack_defs(moe_layer, n_moe)
+        if cfg.first_layer_dense:
+            dense_cfg_ff = cfg.d_ff or 4 * d
+            defs["layer0"] = {
+                "attn_norm": layers.rmsnorm_defs(d),
+                "attn": attention.attn_defs(cfg),
+                "mlp_norm": layers.rmsnorm_defs(d),
+                "mlp": layers.mlp_defs(cfg, dense_cfg_ff),
+            }
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        mamba_layer = {"norm": layers.rmsnorm_defs(d), "mamba": ssm.mamba2_defs(cfg)}
+        defs["layers"] = _stack_defs(_stack_defs(mamba_layer, per), groups)
+        defs["shared"] = _attn_layer_defs(cfg)  # ONE block, applied `groups` times
+    elif cfg.family == "ssm":
+        groups = cfg.n_layers // cfg.slstm_every
+        per_m = cfg.slstm_every - 1
+        m_layer = {"norm": layers.rmsnorm_defs(d), "mlstm": xlstm.mlstm_defs(cfg)}
+        s_layer = {"norm": layers.rmsnorm_defs(d), "slstm": xlstm.slstm_defs(cfg)}
+        defs["layers"] = _stack_defs(_stack_defs(m_layer, per_m), groups)
+        defs["slstm_layers"] = _stack_defs(s_layer, groups)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block bodies
+# ---------------------------------------------------------------------------
+
+
+def _remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(f, policy=policy)
+    return jax.checkpoint(f)
+
+
+def _attn_mlp_body(lp, h, cfg, causal_mode):
+    a, _ = attention.attention_block(
+        lp["attn"], layers.rmsnorm(lp["attn_norm"], h), cfg, causal_mode=causal_mode
+    )
+    h = h + a
+    h = h + layers.mlp(lp["mlp"], layers.rmsnorm(lp["mlp_norm"], h), cfg.mlp_kind)
+    return shard_act(h, ("act_batch", "act_seq", None))
+
+
+def _moe_body(lp, h, aux, cfg, causal_mode):
+    a, _ = attention.attention_block(
+        lp["attn"], layers.rmsnorm(lp["attn_norm"], h), cfg, causal_mode=causal_mode
+    )
+    h = h + a
+    y, aux_l = moe.moe_block(lp["moe"], layers.rmsnorm(lp["mlp_norm"], h), cfg)
+    return shard_act(h + y, ("act_batch", "act_seq", None)), aux + aux_l
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    """Token / frame / patch embedding -> (B, S, d) activations."""
+    dt = layers.act_dt(cfg)
+    if cfg.family == "audio":
+        h = layers.linear(params["frontend_proj"], batch["frames"].astype(dt))
+    elif cfg.family == "vlm":
+        patches = layers.linear(params["patch_proj"], batch["patches"].astype(dt))
+        tok = layers.embed(params["embed"], batch["tokens"], cfg)
+        h = jnp.concatenate([patches, tok], axis=1)
+    else:
+        h = layers.embed(params["embed"], batch["tokens"], cfg)
+    return shard_act(h, ("act_batch", "act_seq", None))
+
+
+def forward(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    *,
+    causal_mode: str = "blocklist",
+    last_only: bool = False,
+) -> tuple[Array, Array]:
+    """Full-sequence forward. Returns (logits (B, S, vocab), aux_loss).
+
+    ``last_only`` slices the hidden state to the final position BEFORE the
+    unembed — serving prefill emits (B, 1, vocab) and the (B, S, vocab)
+    logits tensor never exists (it was the peak-memory term for the
+    150k-200k-vocab archs)."""
+    h = embed_inputs(params, batch, cfg)
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        body = _remat(
+            lambda hh, lp: (_attn_mlp_body(lp, hh, cfg, causal_mode), None), cfg
+        )
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    elif cfg.family == "moe":
+        if cfg.first_layer_dense:
+            h = _attn_mlp_body(params["layer0"], h, cfg, causal_mode)
+
+        def moe_step(carry, lp):
+            hh, a = carry
+            hh, a = _moe_body(lp, hh, a, cfg, causal_mode)
+            return (hh, a), None
+
+        body = _remat(moe_step, cfg)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["layers"])
+    elif cfg.family == "hybrid":
+
+        def group(hh, glp):
+            def inner(hhh, lp):
+                y, _ = ssm.mamba2_block(lp["mamba"], layers.rmsnorm(lp["norm"], hhh), cfg)
+                return shard_act(hhh + y, ("act_batch", "act_seq", None)), None
+
+            hh, _ = jax.lax.scan(_remat(inner, cfg), hh, glp)
+            hh = _attn_mlp_body(params["shared"], hh, cfg, causal_mode)
+            return hh, None
+
+        h, _ = jax.lax.scan(group, h, params["layers"])
+    elif cfg.family == "ssm":
+
+        def group(hh, xs):
+            glp, slp = xs
+
+            def inner(hhh, lp):
+                y, _ = xlstm.mlstm_block(lp["mlstm"], layers.rmsnorm(lp["norm"], hhh), cfg)
+                return shard_act(hhh + y, ("act_batch", "act_seq", None)), None
+
+            hh, _ = jax.lax.scan(_remat(inner, cfg), hh, glp)
+            y, _ = xlstm.slstm_block(slp["slstm"], layers.rmsnorm(slp["norm"], hh), cfg)
+            return shard_act(hh + y, ("act_batch", "act_seq", None)), None
+
+        h, _ = jax.lax.scan(group, h, (params["layers"], params["slstm_layers"]))
+    else:
+        raise ValueError(cfg.family)
+
+    if last_only:
+        h = h[:, -1:]
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = layers.unembed(params["embed"], h, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode: state init + one-token step
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    """Decode-state pytree; shapes only depend on (cfg, batch, max_len)."""
+    if cfg.family in ("dense", "vlm"):
+        cache = attention.init_kv_cache(cfg, batch, max_len)
+        return {
+            "kv": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), cache
+            )
+        }
+    if cfg.family == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.first_layer_dense else 0)
+        cache = attention.init_kv_cache(cfg, batch, max_len)
+        out = {"kv": jax.tree.map(lambda x: jnp.broadcast_to(x, (n_moe, *x.shape)), cache)}
+        if cfg.first_layer_dense:
+            out["kv0"] = attention.init_kv_cache(cfg, batch, max_len)
+        return out
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        ms = ssm.mamba2_state_init(cfg, batch)
+        kv = attention.init_kv_cache(cfg, batch, max_len)
+        return {
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (groups, per, *x.shape)), ms
+            ),
+            "kv": jax.tree.map(lambda x: jnp.broadcast_to(x, (groups, *x.shape)), kv),
+        }
+    if cfg.family == "ssm":
+        groups = cfg.n_layers // cfg.slstm_every
+        per_m = cfg.slstm_every - 1
+        m = xlstm.mlstm_state_init(cfg, batch)
+        s = xlstm.slstm_state_init(cfg, batch)
+        return {
+            "mlstm": jnp.broadcast_to(m, (groups, per_m, *m.shape)),
+            "slstm": jax.tree.map(lambda x: jnp.broadcast_to(x, (groups, *x.shape)), s),
+        }
+    raise ValueError(f"no decode state for family {cfg.family!r}")
+
+
+def _attn_decode_body(lp, h, kv, length, cfg):
+    a, kv = attention.attention_block(
+        lp["attn"],
+        layers.rmsnorm(lp["attn_norm"], h),
+        cfg,
+        cache=kv,
+        cache_length=length,
+    )
+    h = h + a
+    if "mlp" in lp:
+        h = h + layers.mlp(lp["mlp"], layers.rmsnorm(lp["mlp_norm"], h), cfg.mlp_kind)
+    else:
+        y, _ = moe.moe_block(lp["moe"], layers.rmsnorm(lp["mlp_norm"], h), cfg)
+        h = h + y
+    return h, kv
+
+
+def decode_step(
+    params: dict, token: Array, state: PyTree, length: Array, cfg: ArchConfig
+) -> tuple[Array, PyTree]:
+    """One decode step. token: (B, 1) int32 (or (B, 1, frontend_dim) for
+    frame inputs); length: scalar int32 tokens already cached. Returns
+    (logits (B, 1, vocab), new_state)."""
+    h = layers.embed(params["embed"], token, cfg) if token.ndim == 2 else token
+    h = shard_act(h, ("act_batch", "act_seq", None))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        lp_stack = params["layers"]
+        if cfg.family == "moe" and cfg.first_layer_dense:
+            h, kv0 = _attn_decode_body(params["layer0"], h, state["kv0"], length, cfg)
+
+        def body(h, xs):
+            lp, kv = xs
+            h, kv = _attn_decode_body(lp, h, kv, length, cfg)
+            return h, kv
+
+        h, new_kv = jax.lax.scan(body, h, (lp_stack, state["kv"]))
+        new_state = dict(state, kv=new_kv)
+        if cfg.family == "moe" and cfg.first_layer_dense:
+            new_state["kv0"] = kv0
+    elif cfg.family == "hybrid":
+
+        def group(h, xs):
+            glp, mstates, kv = xs
+
+            def inner(h, xs2):
+                lp, st = xs2
+                y, st = ssm.mamba2_block(
+                    lp["mamba"], layers.rmsnorm(lp["norm"], h), cfg, state=st
+                )
+                return h + y, st
+
+            h, mstates = jax.lax.scan(inner, h, (glp, mstates))
+            a, kv = attention.attention_block(
+                params["shared"]["attn"],
+                layers.rmsnorm(params["shared"]["attn_norm"], h),
+                cfg,
+                cache=kv,
+                cache_length=length,
+            )
+            h = h + a
+            h = h + layers.mlp(
+                params["shared"]["mlp"],
+                layers.rmsnorm(params["shared"]["mlp_norm"], h),
+                cfg.mlp_kind,
+            )
+            return h, (mstates, kv)
+
+        h, (new_m, new_kv) = jax.lax.scan(group, h, (params["layers"], state["mamba"], state["kv"]))
+        new_state = {"mamba": new_m, "kv": new_kv}
+    elif cfg.family == "ssm":
+
+        def group(h, xs):
+            glp, slp, mst, sst = xs
+
+            def inner(h, xs2):
+                lp, st = xs2
+                y, st = xlstm.mlstm_block(
+                    lp["mlstm"], layers.rmsnorm(lp["norm"], h), cfg, state=st
+                )
+                return h + y, st
+
+            h, mst = jax.lax.scan(inner, h, (glp, mst))
+            y, sst = xlstm.slstm_block(
+                slp["slstm"], layers.rmsnorm(slp["norm"], h), cfg, state=sst
+            )
+            return h + y, (mst, sst)
+
+        h, (new_m, new_s) = jax.lax.scan(
+            group, h, (params["layers"], params["slstm_layers"], state["mlstm"], state["slstm"])
+        )
+        new_state = {"mlstm": new_m, "slstm": new_s}
+    else:
+        raise ValueError(cfg.family)
+
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = layers.unembed(params["embed"], h, cfg)
+    return logits, new_state

@@ -1,0 +1,164 @@
+"""xLSTM blocks: chunked mLSTM (matrix memory) + recurrent sLSTM.
+
+mLSTM rides the same chunked linear-recurrence engine as Mamba2 (ssm.py):
+state C = f*C + i*(k (x) v), read y = q.C / max(q.n, eps) with the
+normalizer n run as an extra value column. Gates are per-head scalars.
+
+Numerics note (DESIGN.md §2): the xLSTM paper uses exponential input gating
+with a running stabilizer m; we fold the input gate multiplicatively into k
+with sigmoid gating, which keeps every exponent <= 0 (the same invariant the
+SSD engine relies on). The memory/retrieval structure — matrix memory,
+per-head forget decay, normalizer — is preserved; only the gate
+parameterization is simplified, and the sweep tests cover state-carry
+exactness under it.
+
+sLSTM has no parallel form (true nonlinear recurrence) — it is a lax.scan
+over time with block-diagonal per-head recurrent weights, exactly as the
+paper describes the architecture's sequential part.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.base import pdef, shard_act
+from repro.models.ssm import chunked_linear_recurrence, linear_recurrence_step
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.n_heads
+    return {
+        "up_gate": pdef((d, d_in), ("embed", "mlp"), init="scaled"),
+        "up": pdef((d, d_in), ("embed", "mlp"), init="scaled"),
+        "wq": pdef((d_in, d_in), ("mlp", "heads"), init="scaled"),
+        "wk": pdef((d_in, d_in), ("mlp", "heads"), init="scaled"),
+        "wv": pdef((d_in, d_in), ("mlp", "heads"), init="scaled"),
+        "w_if": pdef((d, 2 * H), ("embed", None), init="scaled"),
+        "b_if": pdef((2 * H,), (None,), init="zeros"),
+        "norm": layers.rmsnorm_defs(d_in),
+        "down": pdef((d_in, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def mlstm_block(
+    params: dict,
+    x: Array,  # (B, S, d)
+    cfg,
+    *,
+    state: Array | None = None,  # (B, H, dk, dv+1) matrix memory + normalizer
+) -> tuple[Array, Array]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    d_in = cfg.ssm_expand * d
+    dh = d_in // H
+
+    u = x @ params["up"].astype(x.dtype)  # (B, S, d_in)
+    gate = jax.nn.silu(x @ params["up_gate"].astype(x.dtype))
+    q = (u @ params["wq"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = (u @ params["wk"].astype(x.dtype)).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = (u @ params["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+
+    if_pre = (x @ params["w_if"].astype(x.dtype) + params["b_if"].astype(x.dtype)).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(if_pre[..., :H])  # (B, S, H)
+    log_f = jax.nn.log_sigmoid(if_pre[..., H:])  # <= 0
+
+    k_in = k.astype(jnp.float32) * i_gate[..., None]
+    v_ext = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((B, S, H, 1), jnp.float32)], axis=-1
+    )
+
+    if state is None or S > 1:
+        y_ext, new_state = chunked_linear_recurrence(
+            q.astype(jnp.float32), k_in, v_ext, log_f, chunk=128, state0=state
+        )
+    else:
+        y1, new_state = linear_recurrence_step(
+            state, q[:, 0].astype(jnp.float32), k_in[:, 0], v_ext[:, 0], log_f[:, 0]
+        )
+        y_ext = y1[:, None]
+
+    y = y_ext[..., :dh] / jnp.maximum(jnp.abs(y_ext[..., dh:]), 1e-6)
+    y = y.reshape(B, S, d_in).astype(x.dtype) * gate
+    y = layers.rmsnorm(params["norm"], y)
+    return y @ params["down"].astype(x.dtype), new_state
+
+
+def mlstm_state_init(cfg, batch: int) -> Array:
+    H = cfg.n_heads
+    dh = cfg.ssm_expand * cfg.d_model // H
+    return shard_act(
+        jnp.zeros((batch, H, dh, dh + 1), jnp.float32),
+        ("act_batch", "act_model", None, None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = d_in // H
+    return {
+        "w_in": pdef((d, 4 * d_in), ("embed", "mlp"), init="scaled"),
+        "r": pdef((H, dh, 4 * dh), ("heads", None, None), init="scaled"),
+        "b": pdef((4 * d_in,), ("mlp",), init="zeros"),
+        "norm": layers.rmsnorm_defs(d_in),
+        "down": pdef((d_in, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def slstm_block(
+    params: dict,
+    x: Array,  # (B, S, d)
+    cfg,
+    *,
+    state: tuple[Array, Array] | None = None,  # (c, h) each (B, H, dh)
+) -> tuple[Array, tuple[Array, Array]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    d_in = cfg.ssm_expand * d
+    dh = d_in // H
+
+    pre = (x @ params["w_in"].astype(x.dtype) + params["b"].astype(x.dtype)).reshape(
+        B, S, H, 4 * dh
+    )
+    if state is None:
+        state = (
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+        )
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, pre_t):  # pre_t: (B, H, 4dh)
+        c, h = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, r)  # (B, H, 4dh)
+        z, i, f, o = jnp.split(pre_t.astype(jnp.float32) + rec, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (c, h), h
+
+    (c, h), hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y)
+    return y @ params["down"].astype(x.dtype), (c, h)
+
+
+def slstm_state_init(cfg, batch: int) -> tuple[Array, Array]:
+    H = cfg.n_heads
+    dh = cfg.ssm_expand * cfg.d_model // H
+    z = shard_act(jnp.zeros((batch, H, dh), jnp.float32), ("act_batch", "act_model", None))
+    return (z, z)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, checkpointing, step builders."""
+from repro.train import checkpoint, optimizer, train_step  # noqa: F401

@@ -1,0 +1,120 @@
+"""AdamW + cosine schedule + clipping, plus int8 error-feedback gradient
+compression — pure-pytree implementations (no optax dependency).
+
+The compressor is the distributed-optimization hook: on a real pod the DP
+gradient all-reduce moves 4 bytes/param/step; quantizing to int8 with
+error feedback (residual carried to the next step) cuts that 4x with no
+convergence change at LM scale. Here it wraps the gradient pytree right
+where XLA's reduce-scatter sees it; tests check the EF invariant
+(quantized stream + residual == true stream exactly in expectation and
+within one step's quantization error pointwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False  # int8 error-feedback DP compression
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: PyTree
+    nu: PyTree
+    ef_residual: PyTree | None  # error-feedback residual (when compressing)
+
+
+def init_opt_state(params: PyTree, cfg: OptConfig) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    ef = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if cfg.compress_grads else None
+    return AdamState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros), ef)
+
+
+def lr_at(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def compress_int8_ef(grads: PyTree, residual: PyTree) -> tuple[PyTree, PyTree]:
+    """int8 quantize (per-leaf absmax scale) with error feedback.
+
+    Returns (dequantized grads — what the all-reduce would carry, new
+    residual). The quantize->dequantize round trip is what crosses the wire;
+    the residual keeps the scheme unbiased over steps."""
+
+    def one(g, r):
+        t = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, t - deq
+
+    out = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_r
+
+
+def apply_updates(
+    params: PyTree, grads: PyTree, state: AdamState, cfg: OptConfig
+) -> tuple[PyTree, AdamState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    ef = state.ef_residual
+    if cfg.compress_grads:
+        grads, ef = compress_int8_ef(grads, ef)
+
+    step = state.step + 1
+    lr = lr_at(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step, mu, nu, ef), {"grad_norm": gnorm, "lr": lr}
+
+
+def abstract_opt_state(abstract_params: PyTree, cfg: OptConfig) -> AdamState:
+    """ShapeDtypeStruct mirror of init_opt_state (dry-run)."""
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    ef = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params) if cfg.compress_grads else None
+    return AdamState(jax.ShapeDtypeStruct((), jnp.int32), z, z, ef)

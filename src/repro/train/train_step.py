@@ -1,0 +1,156 @@
+"""Loss + train/serve step builders (the functions the launcher jits).
+
+``make_train_step`` returns a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function with microbatched gradient
+accumulation: the global batch is split into ``n_micro`` chunks scanned
+sequentially, so per-device live activations stay at one microbatch
+regardless of global batch (the knob that fits granite-34b train_4k into
+16 GiB/chip together with scan-over-layers remat).
+
+Losses:
+  decoder families — next-token CE (labels shifted inside), label -1 masks
+  encoder (audio)  — per-frame CE, no shift
+MoE aux (load-balance) loss is added with weight ``aux_weight``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ArchConfig
+from repro.train import optimizer as opt_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    n_micro: int = 1
+    aux_weight: float = 0.01
+    causal_mode: str = "blocklist"
+    grad_dtype: str = "float32"
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, shift: bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked mean CE. labels < 0 are ignored. Returns (loss, n_tokens)."""
+    if shift:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    # Pad/patch positions may make labels longer/shorter than logits (vlm
+    # prepends patches); align on the right.
+    S = min(logits.shape[1], labels.shape[1])
+    logits = logits[:, -S:]
+    labels = labels[:, -S:]
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / n, n
+
+
+def make_loss_fn(cfg: ArchConfig, scfg: StepConfig) -> Callable:
+    def loss_fn(params: PyTree, batch: dict) -> tuple[jnp.ndarray, dict]:
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, aux = transformer.forward(
+            params, inputs, cfg, causal_mode=scfg.causal_mode
+        )
+        loss, n_tok = cross_entropy(logits, batch["labels"], shift=not cfg.is_encoder)
+        total = loss + scfg.aux_weight * aux
+        return total, {"loss": loss, "aux": aux, "n_tokens": n_tok}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig, opt_cfg: opt_lib.OptConfig, scfg: StepConfig
+) -> Callable:
+    loss_fn = make_loss_fn(cfg, scfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params: PyTree, opt_state: opt_lib.AdamState, batch: dict):
+        n_micro = scfg.n_micro
+        if n_micro == 1:
+            (total, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), batch
+            )
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (total, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, g_acc, g
+                )
+                return (g_acc, l_acc + total / n_micro), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, total), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0)), micro
+            )
+            metrics = {"loss": total, "aux": jnp.float32(0.0), "n_tokens": jnp.int32(0)}
+
+        params, opt_state, om = opt_lib.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, **om, total=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, scfg: StepConfig | None = None) -> Callable:
+    scfg = scfg or StepConfig()
+    loss_fn = make_loss_fn(cfg, scfg)
+
+    def eval_step(params: PyTree, batch: dict):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_step(cfg: ArchConfig, sample: str = "greedy", temperature: float = 1.0):
+    """One decode step: (params, token, state, length[, key]) ->
+    (next_token, logits, new_state). This is what ``decode_*`` shapes lower."""
+
+    def serve_step(params: PyTree, token: jnp.ndarray, state: PyTree, length: jnp.ndarray, key=None):
+        logits, state = transformer.decode_step(params, token, state, length, cfg)
+        last = logits[:, -1].astype(jnp.float32)
+        if sample == "greedy":
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            nxt = jax.random.categorical(key, last / temperature).astype(jnp.int32)[:, None]
+        return nxt, logits, state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, scfg: StepConfig | None = None):
+    """Full-sequence forward returning LAST-position logits (B, 1, vocab) —
+    what serving prefill actually emits (the first sampled token). Slicing
+    before the unembed keeps the (B, S, vocab) logits tensor out of HBM
+    entirely (qwen's 152k / llama4's 202k vocab made the full tensor the
+    peak-memory term; see EXPERIMENTS.md §Perf).
+
+    Production prefill would also materialize the KV cache; the compiled
+    artifact covers the compute side (the cache write is the decode path's
+    dynamic_update_slice, exercised by decode shapes)."""
+    scfg = scfg or StepConfig()
+
+    def prefill_step(params: PyTree, batch: dict):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, _ = transformer.forward(
+            params, inputs, cfg, causal_mode=scfg.causal_mode, last_only=True
+        )
+        return logits
+
+    return prefill_step

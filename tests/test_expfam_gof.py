@@ -1,0 +1,111 @@
+"""Exponential-family MLE (Lemma 1) + chi-square GoF (Lemma 2 / Thm 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import expfam, gof
+
+
+def test_normal_mle_recovers_params(rng):
+    x = rng.normal(loc=3.0, scale=2.0, size=(20_000, 3)).astype(np.float32)
+    p = expfam.fit_normal(expfam.suff_stats(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(p.a), 3.0, atol=0.1)
+    np.testing.assert_allclose(np.asarray(p.b), 4.0, rtol=0.1)
+
+
+def test_exponential_mle_recovers_rate(rng):
+    x = rng.exponential(1 / 1.7, size=(20_000, 2)).astype(np.float32)
+    p = expfam.fit_exponential(expfam.suff_stats(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(p.a), 1.7, rtol=0.1)
+
+
+def test_gamma_mle_newton_converges(rng):
+    x = rng.gamma(3.0, 1 / 2.0, size=(30_000, 2)).astype(np.float32)
+    p = expfam.fit_gamma(expfam.suff_stats(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(p.a), 3.0, rtol=0.15)
+    np.testing.assert_allclose(np.asarray(p.b), 2.0, rtol=0.15)
+
+
+def test_masked_stats_ignore_padding(rng):
+    x = rng.normal(size=(100, 4)).astype(np.float32)
+    xp = np.concatenate([x, 1e6 * np.ones((20, 4), np.float32)])
+    mask = np.concatenate([np.ones(100), np.zeros(20)]).astype(np.float32)
+    a = expfam.suff_stats(jnp.asarray(x))
+    b = expfam.suff_stats(jnp.asarray(xp), jnp.asarray(mask))
+    np.testing.assert_allclose(a.sum_x, b.sum_x, rtol=1e-5)
+    np.testing.assert_allclose(a.n, b.n)
+
+
+@pytest.mark.parametrize("family", expfam.FAMILIES)
+def test_cdf_quantile_roundtrip(family, rng):
+    if family == "normal":
+        p = expfam.FamilyParams(family, jnp.asarray([1.0, -2.0]), jnp.asarray([2.0, 0.5]))
+    elif family == "exponential":
+        p = expfam.FamilyParams(family, jnp.asarray([0.7, 2.0]), jnp.zeros(2))
+    else:
+        p = expfam.FamilyParams(family, jnp.asarray([2.0, 5.0]), jnp.asarray([1.0, 3.0]))
+    q = jnp.asarray(rng.uniform(0.05, 0.95, size=(50, 2)), jnp.float32)
+    x = expfam.quantile(p, q)
+    np.testing.assert_allclose(expfam.cdf(p, x), q, atol=2e-3)
+
+
+def test_sample_matches_cdf(rng):
+    p = expfam.FamilyParams("normal", jnp.asarray([0.0]), jnp.asarray([1.0]))
+    s = expfam.sample(p, jax.random.PRNGKey(0), (20_000,))
+    u = np.asarray(expfam.cdf(p, s)).ravel()
+    # CDF-transform of correct distribution is uniform (KS check)
+    ks = np.abs(np.sort(u) - np.arange(1, len(u) + 1) / len(u)).max()
+    assert ks < 0.02, ks
+
+
+def test_gof_confidence_high_for_true_family(rng):
+    x = jnp.asarray(rng.normal(2.0, 1.5, size=(5_000, 2)), jnp.float32)
+    params = expfam.fit_normal(expfam.suff_stats(x))
+    res = gof.pearson_statistic(x, params, t=8)
+    assert float(res.confidence) > 0.05
+
+
+def test_gof_confidence_low_for_wrong_family(rng):
+    # bimodal data fits a single normal badly
+    x = np.concatenate([
+        rng.normal(-6, 0.3, size=(2_500, 2)), rng.normal(6, 0.3, size=(2_500, 2))
+    ]).astype(np.float32)
+    params = expfam.fit_normal(expfam.suff_stats(jnp.asarray(x)))
+    res = gof.pearson_statistic(jnp.asarray(x), params, t=8)
+    assert float(res.confidence) < 1e-4
+
+
+def test_fit_best_family_selects_right_one(rng):
+    xe = jnp.asarray(rng.exponential(1.0, size=(5_000, 2)), jnp.float32)
+    p, _ = gof.fit_best_family(xe)
+    assert p.family in ("exponential", "gamma")  # gamma nests exponential
+    xn = jnp.asarray(rng.normal(5.0, 1.0, size=(5_000, 2)), jnp.float32)
+    p, _ = gof.fit_best_family(xn)
+    assert p.family == "normal"
+
+
+def test_negative_data_eliminates_positive_support_families(rng):
+    x = jnp.asarray(rng.normal(-5.0, 1.0, size=(2_000, 2)), jnp.float32)
+    p, _ = gof.fit_best_family(x)
+    assert p.family == "normal"
+
+
+def test_theorem2_global_confidence_lower_bound(rng):
+    """Thm 2: global confidence >= min_i c_i (statement direction)."""
+    ks, dofs, confs = [], [], []
+    for i in range(6):
+        x = jnp.asarray(rng.normal(i, 1.0 + 0.1 * i, size=(2_000, 2)), jnp.float32)
+        params = expfam.fit_normal(expfam.suff_stats(x))
+        r = gof.pearson_statistic(x, params, t=8)
+        ks.append(float(r.statistic))
+        dofs.append(float(r.dof))
+        confs.append(float(r.confidence))
+    c_bar = float(gof.global_confidence(jnp.asarray(ks), jnp.asarray(dofs)))
+    assert c_bar >= min(confs) - 1e-6, (c_bar, min(confs))
+
+
+def test_chi2_sf_matches_known_values():
+    # chi2 with df=1: P(X >= 3.841) ~ 0.05; df=10: P(X >= 18.31) ~ 0.05
+    np.testing.assert_allclose(float(gof.chi2_sf(3.841, 1.0)), 0.05, atol=2e-3)
+    np.testing.assert_allclose(float(gof.chi2_sf(18.307, 10.0)), 0.05, atol=2e-3)

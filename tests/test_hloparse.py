@@ -1,0 +1,68 @@
+"""HLO structural parser: trip-count-weighted FLOPs on known graphs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hloparse
+
+
+def _parse(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hloparse.analyze(compiled.as_text())
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    res = _parse(lambda x, y: x @ y, a, b)
+    assert res["flops_per_device"] == pytest.approx(2 * 128 * 256 * 64, rel=1e-6)
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jnp.zeros((16, 64, 64), jnp.float32)  # 16 scanned layers
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def fn(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    res = _parse(fn, w, x)
+    want = 16 * 2 * 8 * 64 * 64
+    assert res["flops_per_device"] == pytest.approx(want, rel=0.01), (
+        res["flops_per_device"], want)
+
+
+def test_nested_scan_trip_counts():
+    w = jnp.zeros((4, 3, 32, 32), jnp.float32)
+    x = jnp.zeros((8, 32), jnp.float32)
+
+    def fn(w, x):
+        def outer(h, wg):
+            def inner(h2, wi):
+                return h2 @ wi, None
+            h, _ = jax.lax.scan(inner, h, wg)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h
+
+    res = _parse(fn, w, x)
+    want = 12 * 2 * 8 * 32 * 32
+    assert res["flops_per_device"] == pytest.approx(want, rel=0.01)
+
+
+def test_shape_bytes():
+    assert hloparse.shape_bytes("f32[4,8]{1,0}") == 128
+    assert hloparse.shape_bytes("bf16[10]") == 20
+    assert hloparse.shape_bytes("(f32[2], s32[3])") == 20
+    assert hloparse.shape_bytes("pred[]") == 1
+
+
+def test_dot_traffic_counts_operands():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    res = _parse(lambda x, y: x @ y, a, b)
+    want = (128 * 256 + 256 * 64 + 128 * 64) * 4
+    assert res["dot_traffic_bytes_per_device"] == pytest.approx(want, rel=1e-6)

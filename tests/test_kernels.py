@@ -1,0 +1,78 @@
+"""Pallas kernel sweeps: every (shape, dtype, metric) cell vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(5, 7, 3), (128, 128, 128), (130, 70, 33), (1, 1, 1), (257, 63, 130)]
+
+
+@pytest.mark.parametrize("metric", ops.METRICS)
+@pytest.mark.parametrize("a,b,m", SHAPES)
+def test_pairdist_matches_ref(metric, a, b, m, rng):
+    x = jnp.asarray(rng.normal(size=(a, m)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+    np.testing.assert_allclose(
+        ops.pairdist(x, y, metric), ref.pairdist(x, y, metric), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "cosine"])
+@pytest.mark.parametrize("a,b,m", [(64, 96, 16), (130, 70, 33)])
+def test_pairdist_mask_matches_ref(metric, a, b, m, rng):
+    x = jnp.asarray(rng.normal(size=(a, m)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+    d = np.asarray(ref.pairdist(x, y, metric))
+    for q in (0.1, 0.5, 0.9):
+        delta = float(np.quantile(d, q))
+        got = np.asarray(ops.pairdist_mask(x, y, delta, metric))
+        want = np.asarray(ref.pairdist_mask(x, y, delta, metric))
+        # threshold-boundary ties can flip with fp reassociation; tolerate
+        # only exact-boundary disagreements
+        diff = got != want
+        if diff.any():
+            assert np.allclose(d[diff], delta, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairdist_dtypes(dtype, rng):
+    x = jnp.asarray(rng.normal(size=(64, 32)), dtype)
+    y = jnp.asarray(rng.normal(size=(48, 32)), dtype)
+    got = ops.pairdist(x, y, "l2")
+    want = ref.pairdist(x.astype(jnp.float32), y.astype(jnp.float32), "l2")
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_pairdist_count(rng):
+    x = jnp.asarray(rng.normal(size=(40, 8)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(30, 8)), jnp.float32)
+    np.testing.assert_array_equal(
+        ops.pairdist_count(x, y, 2.5, "l1"), ref.pairdist_count(x, y, 2.5, "l1")
+    )
+
+
+@pytest.mark.parametrize("n,m,t", [(10, 3, 8), (256, 8, 8), (300, 17, 5), (1000, 2, 16)])
+def test_histogram_matches_ref(n, m, t, rng):
+    u = jnp.asarray(rng.uniform(size=(n, m)), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, size=(n,)), jnp.float32)
+    np.testing.assert_allclose(ops.histogram(u, t), ref.histogram(u, t), atol=1e-6)
+    np.testing.assert_allclose(
+        ops.histogram(u, t, w), ref.histogram(u, t, w), atol=1e-6
+    )
+
+
+def test_histogram_counts_sum_to_n(rng):
+    u = jnp.asarray(rng.uniform(size=(500, 4)), jnp.float32)
+    h = np.asarray(ops.histogram(u, 8))
+    np.testing.assert_allclose(h.sum(-1), 500.0)
+
+
+def test_kernel_vs_oracle_consistency_in_join_path(rng):
+    """The use_kernel flag must not change join semantics."""
+    x = jnp.asarray(rng.normal(size=(100, 6)), jnp.float32)
+    a = np.asarray(ops.pairdist(x, x[:10], "l1", use_kernel=True))
+    b = np.asarray(ops.pairdist(x, x[:10], "l1", use_kernel=False))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

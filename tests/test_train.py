@@ -1,0 +1,189 @@
+"""Training substrate: optimizer math, EF compression invariant,
+microbatch-equivalence, loss descent, checkpoint round trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import base, transformer
+from repro.models.config import ShapeConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def _setup(name="qwen1.5-0.5b", compress=False, n_micro=1):
+    cfg = configs.get_reduced(name)
+    params = base.init_params(jax.random.PRNGKey(0), transformer.model_defs(cfg))
+    ocfg = opt_lib.OptConfig(total_steps=50, warmup_steps=2, compress_grads=compress)
+    opt = opt_lib.init_opt_state(params, ocfg)
+    scfg = ts.StepConfig(n_micro=n_micro)
+    step = jax.jit(ts.make_train_step(cfg, ocfg, scfg))
+    batch = configs.input_specs(cfg, ShapeConfig("s", 64, 4, "train"),
+                                abstract=False)["batch"]
+    return cfg, params, ocfg, opt, step, batch
+
+
+def test_loss_decreases_on_fixed_batch():
+    _, params, _, opt, step, batch = _setup()
+    losses = []
+    for _ in range(6):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["total"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_compressed_training_still_descends():
+    _, params, _, opt, step, batch = _setup(compress=True)
+    losses = []
+    for _ in range(6):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["total"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_grad_equivalence():
+    """The scan-accumulated microbatch gradient must equal the full-batch
+    gradient (compared pre-optimizer: Adam turns fp-noise sign flips of
+    near-zero grads into full ±lr update differences, so comparing params
+    post-update is ill-conditioned by construction)."""
+    cfg, params, ocfg, opt, _, batch = _setup(n_micro=1)
+    loss_fn = ts.make_loss_fn(cfg, ts.StepConfig())
+    g_full = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+
+    n_micro = 4
+    micro = jax.tree.map(
+        lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), batch
+    )
+    g_acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for i in range(n_micro):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        g = jax.grad(lambda p: loss_fn(p, mb)[0])(params)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / n_micro,
+                             g_acc, g)
+    # bf16 activations: different batch shapes change reduction order and
+    # intermediate rounding; measured noise is ~1% of each leaf's max-grad
+    # (diagnosed elementwise — no leaf-structure or scaling error).
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        scale = max(float(jnp.abs(a).max()), 1e-6)
+        an = np.asarray(a, np.float32) / scale
+        bn = np.asarray(b, np.float32) / scale
+        np.testing.assert_allclose(an, bn, atol=2.5e-2)
+        corr = np.corrcoef(an.ravel(), bn.ravel())[0, 1]
+        assert corr > 0.999, corr
+
+
+def test_int8_ef_compression_invariant(rng):
+    """Error feedback: sum of dequantized stream + final residual equals the
+    sum of the true gradient stream exactly."""
+    g_stream = [jnp.asarray(rng.normal(size=(64,)), jnp.float32) for _ in range(10)]
+    residual = {"w": jnp.zeros((64,), jnp.float32)}
+    sent_total = jnp.zeros((64,))
+    for g in g_stream:
+        deq, residual = opt_lib.compress_int8_ef({"w": g}, residual)
+        sent_total = sent_total + deq["w"]
+    true_total = sum(g_stream)
+    np.testing.assert_allclose(
+        np.asarray(sent_total + residual["w"]), np.asarray(true_total),
+        rtol=1e-5, atol=1e-5,
+    )
+    # pointwise error of a single step bounded by one quantization bucket
+    deq1, r1 = opt_lib.compress_int8_ef({"w": g_stream[0]},
+                                        {"w": jnp.zeros((64,))})
+    scale = float(jnp.max(jnp.abs(g_stream[0]))) / 127.0
+    assert float(jnp.abs(r1["w"]).max()) <= scale / 2 + 1e-7
+
+
+def test_lr_schedule_shape():
+    ocfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                             min_lr_ratio=0.1)
+    lrs = [float(opt_lib.lr_at(jnp.asarray(s), ocfg)) for s in range(101)]
+    assert lrs[0] == 0.0 and abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, abs=1e-3)
+    assert all(lrs[i] >= lrs[i + 1] - 1e-9 for i in range(10, 100))
+
+
+def test_grad_clip_bounds_update():
+    g = {"w": jnp.full((4,), 100.0)}
+    p = {"w": jnp.zeros((4,))}
+    ocfg = opt_lib.OptConfig(clip_norm=1.0, lr=1.0, weight_decay=0.0)
+    st = opt_lib.init_opt_state(p, ocfg)
+    _, _, m = opt_lib.apply_updates(p, g, st, ocfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.asarray([[1, -1, 2, 3]])
+    loss, n = ts.cross_entropy(logits, labels, shift=False)
+    assert int(n) == 3
+    assert float(loss) == pytest.approx(np.log(8), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, params, ocfg, opt, step, batch = _setup()
+    params, opt, _ = step(params, opt, batch)
+    st = ckpt_lib.TrainState(params, opt, step=7, data_cursor=28, rng_seed=3)
+    ckpt_lib.save(str(tmp_path), st)
+    like = ckpt_lib.TrainState(
+        jax.tree.map(jnp.zeros_like, params), jax.tree.map(jnp.zeros_like, opt),
+        0, 0, 0,
+    )
+    back = ckpt_lib.restore(str(tmp_path), like)
+    assert back.step == 7 and back.data_cursor == 28 and back.rng_seed == 3
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(back.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale tmp dir (crash artifact) is invisible to latest_step."""
+    os.makedirs(tmp_path / "step_000000099.tmp")
+    assert ckpt_lib.latest_step(str(tmp_path)) is None
+    p = {"w": jnp.ones((3,))}
+    ckpt_lib.save(str(tmp_path), ckpt_lib.TrainState(p, {"s": p}, 5, 0, 0))
+    assert ckpt_lib.latest_step(str(tmp_path)) == 5
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    p = {"w": jnp.ones((3,))}
+    for s in range(6):
+        ckpt_lib.save(str(tmp_path), ckpt_lib.TrainState(p, {}, s, 0, 0), keep_k=3)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 3
+    assert ckpt_lib.latest_step(str(tmp_path)) == 5
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path):
+    """Crash/restart must land on the same loss curve as a straight run."""
+    cfg, params0, ocfg, opt0, step, batch = _setup()
+    # straight run: 4 steps
+    p, o = params0, opt0
+    for _ in range(4):
+        p, o, m = step(p, o, batch)
+    loss_straight = float(m["total"])
+
+    # interrupted run: 2 steps, checkpoint, restore, 2 more
+    p, o = params0, opt0
+    for _ in range(2):
+        p, o, _ = step(p, o, batch)
+    ckpt_lib.save(str(tmp_path), ckpt_lib.TrainState(p, o, 2, 8, 0))
+    like = ckpt_lib.TrainState(
+        jax.tree.map(jnp.zeros_like, p), jax.tree.map(jnp.zeros_like, o), 0, 0, 0
+    )
+    back = ckpt_lib.restore(str(tmp_path), like)
+    p, o = back.params, back.opt_state
+    for _ in range(2):
+        p, o, m = step(p, o, batch)
+    assert float(m["total"]) == pytest.approx(loss_straight, rel=1e-5)

@@ -1,0 +1,59 @@
+"""String/set support (paper §6.2): q-gram filter completeness + MinHash."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spjoin
+from repro.data import synthetic, vectorize
+
+
+@given(st.text("abcd", min_size=1, max_size=15), st.text("abcd", min_size=1, max_size=15))
+@settings(max_examples=100, deadline=None)
+def test_qgram_l1_lower_bounds_edit(a, b):
+    """L1 on q-gram profiles <= 2q * edit distance (the classic filter), so
+    joining profiles at 2q*delta is a COMPLETE candidate filter."""
+    q = 2
+    prof = vectorize.qgram_profile([a, b], q=q, dim=128)
+    l1 = float(np.abs(prof[0] - prof[1]).sum())
+    ed = vectorize.edit_distance(a, b)
+    assert l1 <= 2 * q * ed + 1e-6
+
+
+def test_edit_join_via_qgram_filter_is_complete():
+    strs = synthetic.strings(150, seed=5)
+    q, delta = 2, 2
+    prof = vectorize.qgram_profile(strs, q=q, dim=96)
+    cfg = spjoin.JoinConfig(delta=float(2 * q * delta), metric="l1",
+                            k=64, p=4, n_dims=4)
+    cand = spjoin.join(prof, cfg).pairs
+    cand_set = {tuple(p) for p in cand.tolist()}
+    # every true edit pair must be among the filtered candidates
+    for i in range(len(strs)):
+        for j in range(i + 1, len(strs)):
+            if vectorize.edit_distance(strs[i], strs[j]) <= delta:
+                assert (i, j) in cand_set, (strs[i], strs[j])
+
+
+def test_minhash_estimates_jaccard():
+    rng = np.random.default_rng(0)
+    strs = synthetic.strings(60, seed=1)
+    sets = vectorize.shingle_sets(strs, q=3)
+    sigs = vectorize.minhash(sets, k=128)
+    errs = []
+    for _ in range(100):
+        i, j = rng.integers(0, len(strs), 2)
+        true = vectorize.jaccard_distance(sets[i], sets[j])
+        est = float((sigs[i] != sigs[j]).mean())
+        errs.append(abs(true - est))
+    assert np.mean(errs) < 0.06, np.mean(errs)
+
+
+def test_minhash_join_finds_near_duplicate_strings():
+    strs = synthetic.strings(120, mutate=0.05, seed=2)
+    sets = vectorize.shingle_sets(strs, q=3)
+    sigs = vectorize.minhash(sets, k=64).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=0.4, metric="jaccard_minhash", k=48, p=4, n_dims=4)
+    res = spjoin.join(sigs, cfg)
+    truth = spjoin.brute_force_pairs(sigs, 0.4, "jaccard_minhash")
+    assert np.array_equal(res.pairs, truth)
+    assert res.n_pairs > 0  # template corpus must contain near-dups
