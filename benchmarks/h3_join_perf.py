@@ -1,28 +1,38 @@
-"""Hillclimb H3 (§Perf): the distributed SP-Join pipeline itself.
+"""Hillclimb H3 (§Perf): the distributed SP-Join pipeline + the verify engine.
 
-Measures, on an 8-device host mesh (real wall clock — this is the one
-hillclimb target that executes rather than dry-runs):
-  - per-arm wall time of the verify stage (compiled, after warmup),
-  - total shuffle (all_to_all) bytes parsed from the compiled stage,
-  - verification counts and capacity padding.
+Two sections:
 
-Arms:
-  base          exact-fit capacity, no tighten, Pallas-interpret verify off
-                (jnp path — interpret mode is a Python-loop emulator on CPU;
-                the Pallas path is the TPU target, not the CPU fast path)
-  tighten       + distributed MBB tightening of whole boxes (H3-it1)
-  p-sweep       partitions per device 1/2/4 (H3-it2 — padding vs locality)
+1. distributed — per-arm wall time of the 8-device shard_map pipeline
+   (real wall clock; base / tighten / p-sweep arms), run in a subprocess so
+   the device-count flag never leaks into the parent process.
+2. verify-engine — the reduce-phase hot spot head-to-head: the seed's dense
+   per-cell eager loop (``verify.reference_verify``) vs the streaming tiled
+   engine (``verify.verify_pairs``, numpy backend = jitted/fused XLA) on one
+   shared partition plan. Reports speedup, tile/bucket counts and padding
+   occupancy. Acceptance floor: engine >= 2x at N >= 20k on CPU.
 
-Run inside a subprocess (needs the 8-device flag before jax init):
-    PYTHONPATH=src python -m benchmarks.h3_join_perf
+Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
+smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke`` must
+run to completion and write it).
+
+Run:
+    PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import subprocess
 import sys
+import time
 
-from benchmarks.common import Csv
+if __package__ in (None, ""):  # `python benchmarks/h3_join_perf.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))  # repro without install
+
+from benchmarks.common import Csv, OUT_DIR
 
 _SUB = """
 import os
@@ -42,7 +52,7 @@ for (label, tighten, p) in {arms}:
         t0 = time.perf_counter()
         r = distributed.distributed_join(
             jnp.asarray(data), mesh=mesh, delta={delta}, metric="l1", k=256,
-            p=p, n_dims=6, sampler="generative", use_kernel=False,
+            p=p, n_dims=6, sampler="generative", backend="numpy",
             tighten=tighten, seed=0)
         walls.append(time.perf_counter() - t0)
     out.append(dict(label=label, p=p, wall_cold_s=walls[0], wall_s=walls[-1],
@@ -54,18 +64,88 @@ print(json.dumps(out))
 """
 
 
-def run(n: int = 4000, delta: float = 6.0) -> None:
-    arms = [("base", False, 16), ("tighten", True, 16),
-            ("tighten_p8", True, 8), ("tighten_p32", True, 32)]
+def run_distributed(n: int, delta: float, arms) -> list[dict]:
     prog = _SUB.format(n=n, delta=delta, arms=repr(arms))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {"PYTHONPATH": os.path.join(root, "src"), "PATH": "/usr/bin:/bin",
+           "HOME": os.environ.get("HOME", "/root")}
+    if os.environ.get("JAX_PLATFORMS"):
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     res = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=1800,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd=".",
+        timeout=1800, env=env, cwd=root,
     )
     assert res.returncode == 0, res.stderr[-3000:]
-    rows = json.loads(res.stdout.splitlines()[-1])
+    return json.loads(res.stdout.splitlines()[-1])
+
+
+def run_verify_engine(n: int, delta: float) -> dict:
+    """Reference dense loop vs streaming engine on one shared partition plan."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import partition, spjoin, verify
+    from repro.data import synthetic
+
+    data = synthetic.mixture(n, 12, n_clusters=6, skew=0.5, seed=0)
+    cfg = spjoin.JoinConfig(delta=delta, metric="l1", k=256, p=16, n_dims=6,
+                            sampler="generative", seed=0)
+    key = jax.random.PRNGKey(cfg.seed)
+    shards = list(jnp.array_split(jnp.asarray(data), 4))
+    allx = jnp.concatenate(shards)
+    k_sample, k_anchor = jax.random.split(key)
+    node_stats = spjoin.fit_node_stats(shards, cfg.t_cells)
+    pivots = spjoin.draw_pivots(k_sample, shards, node_stats, cfg)
+    plan, smap = spjoin.build_plan(k_anchor, pivots, cfg)
+    xm = smap(allx)
+    cells = partition.assign_kernel(plan, xm)
+    plan = partition.tighten(plan, xm, cells)
+    member = partition.whole_membership(plan, xm)
+    cells_np, member_np = np.asarray(cells), np.asarray(member)
+
+    # Symmetric protocol: min of 2 reps for BOTH paths (rep 0 warms eager
+    # dispatch caches on the reference and the per-bucket compile cache on
+    # the engine), so the speedup compares steady state to steady state.
+    t_ref, ref_pairs, n_verif = float("inf"), None, 0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        ref_pairs, n_verif = verify.reference_verify(
+            allx, cells_np, member_np, cfg.delta, cfg.metric
+        )
+        t_ref = min(t_ref, time.perf_counter() - t0)
+
+    ecfg = verify.EngineConfig(backend="numpy")
+    t_eng, eng_pairs, stats = float("inf"), None, None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        eng_pairs, stats = verify.verify_pairs(
+            allx, cells_np, member_np, cfg.delta, cfg.metric, config=ecfg
+        )
+        t_eng = min(t_eng, time.perf_counter() - t0)
+    assert np.array_equal(ref_pairs, eng_pairs), "engine != reference pairs"
+    return dict(
+        n=n, delta=delta, n_pairs=int(eng_pairs.shape[0]),
+        n_verifications=n_verif,
+        reference_s=round(t_ref, 3), engine_s=round(t_eng, 3),
+        speedup=round(t_ref / max(t_eng, 1e-9), 2),
+        n_tiles=stats.n_tiles, n_buckets=stats.n_buckets,
+        occupancy=round(stats.occupancy, 3),
+    )
+
+
+def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
+        smoke: bool = False) -> dict:
+    if smoke:
+        # Smoke shrinks only sizes the caller left at their defaults, so
+        # `--smoke --n-verify 50000` still measures the requested N.
+        n = 400 if n == 4000 else n
+        n_verify = 2_000 if n_verify == 20_000 else n_verify
+        arms = [("tighten", True, 16)]
+    else:
+        arms = [("base", False, 16), ("tighten", True, 16),
+                ("tighten_p8", True, 8), ("tighten_p32", True, 32)]
+
+    rows = run_distributed(n, delta, arms)
     csv = Csv("bench_h3.csv",
               ["arm", "p", "wall_warm_s", "wall_cold_s", "hits",
                "verifications", "cap_w", "padding", "max_cell"])
@@ -76,6 +156,32 @@ def run(n: int = 4000, delta: float = 6.0) -> None:
                 int(r["max_cell"]))
     csv.close()
 
+    engine = run_verify_engine(n_verify, delta)
+    csv2 = Csv("bench_h3_verify.csv",
+               ["n", "reference_s", "engine_s", "speedup", "tiles", "buckets",
+                "occupancy"])
+    csv2.row(engine["n"], engine["reference_s"], engine["engine_s"],
+             engine["speedup"], engine["n_tiles"], engine["n_buckets"],
+             engine["occupancy"])
+    csv2.close()
+
+    report = dict(smoke=smoke, distributed=rows, verify_engine=engine)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "h3_perf.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report))
+    return report
+
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; CI contract: must finish and emit JSON")
+    ap.add_argument("--n", type=int, default=4000,
+                    help="distributed-section dataset size")
+    ap.add_argument("--n-verify", type=int, default=20_000,
+                    help="verify-engine-section dataset size")
+    ap.add_argument("--delta", type=float, default=6.0)
+    args = ap.parse_args()
+    run(n=args.n, delta=args.delta, n_verify=args.n_verify, smoke=args.smoke)

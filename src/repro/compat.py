@@ -1,0 +1,41 @@
+"""JAX version compatibility shims.
+
+The codebase targets current JAX (``jax.shard_map`` with ``check_vma``);
+older releases only ship ``jax.experimental.shard_map`` whose equivalent
+flag is ``check_rep``. Everything that builds a shard_map goes through
+:func:`shard_map` so the version probe lives in exactly one place.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _resolve_shard_map():
+    """Pick (shard_map fn, replication-check kwarg name) for this jax.
+
+    The discriminant is the parameter name, not where the function lives:
+    some releases export top-level ``jax.shard_map`` while still spelling
+    the flag ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins without introspectable sigs
+        params = {}
+    flag = "check_vma" if "check_vma" in params else "check_rep"
+    return fn, flag
+
+
+_SHARD_MAP, _CHECK_FLAG = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the current flag spelling (``check_vma``),
+    mapped onto ``check_rep`` for older releases."""
+    kwargs = {_CHECK_FLAG: check_vma}
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

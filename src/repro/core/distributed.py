@@ -50,7 +50,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
+from repro.core import verify as verify_lib
 from repro.kernels import ops as kops
 
 Array = jnp.ndarray
@@ -61,7 +63,7 @@ Array = jnp.ndarray
 # ---------------------------------------------------------------------------
 
 
-def _fit_all_families(x: Array, valid: Array, t_cells: int, use_kernel: bool):
+def _fit_all_families(x: Array, valid: Array, t_cells: int, backend: str):
     """Fit every candidate family on one shard; return (packed, conf) stacked
     per family. Families whose support excludes the data self-eliminate."""
     stats = expfam.suff_stats(x, valid)
@@ -70,7 +72,7 @@ def _fit_all_families(x: Array, valid: Array, t_cells: int, use_kernel: bool):
     for fam in expfam.FAMILIES:
         params = expfam.fit(fam, stats)
         u = expfam.cdf(params, x.astype(jnp.float32))
-        nu = kops.histogram(u, t_cells, valid.astype(jnp.float32), use_kernel=use_kernel)
+        nu = kops.histogram(u, t_cells, valid.astype(jnp.float32), backend=backend)
         n_eff = valid.astype(jnp.float32).sum()
         expected = jnp.maximum(n_eff / t_cells, 1e-9)
         k_star = (((nu - expected) ** 2) / expected).sum()
@@ -84,13 +86,20 @@ def _fit_all_families(x: Array, valid: Array, t_cells: int, use_kernel: bool):
     return jnp.stack(packed), jnp.stack(confs)  # (F, 2m+1), (F,)
 
 
-def make_stage_stats(mesh: Mesh, axis: str, t_cells: int = 8, use_kernel: bool = True):
+def make_stage_stats(
+    mesh: Mesh,
+    axis: str,
+    t_cells: int = 8,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+):
     """Build the jitted stats stage. Input: global (N, m) data sharded on
     ``axis`` plus an (N,) validity mask. Output (replicated): per-node packed
     params (M, 2m+1), confidences (M,), counts (M,)."""
+    backend = kops.resolve_backend(backend, use_kernel=use_kernel)
 
     def per_shard(x: Array, valid: Array):
-        packed, confs = _fit_all_families(x, valid, t_cells, use_kernel)
+        packed, confs = _fit_all_families(x, valid, t_cells, backend)
         best = jnp.argmax(confs)
         my_packet = packed[best]
         my_conf = confs[best]
@@ -100,7 +109,7 @@ def make_stage_stats(mesh: Mesh, axis: str, t_cells: int = 8, use_kernel: bool =
         count_all = jax.lax.all_gather(my_count, axis)  # (M,)
         return packets, conf_all, count_all
 
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
@@ -207,9 +216,12 @@ def build_join_plan(
     )
 
 
-def _map_assign(plan: JoinPlan, x: Array, valid: Array, use_kernel: bool):
-    """Space-map a shard and compute kernel cell + whole membership."""
-    xm = kops.pairdist(x, plan.anchors, plan.metric, use_kernel=use_kernel)  # (n_loc, n)
+def _map_assign(plan: JoinPlan, x: Array, valid: Array, backend: str):
+    """Space-map a shard and compute kernel cell + whole membership.
+
+    Also returns the mapped coordinates ``xm`` so callers that need them
+    (the counting stage's MBB pass) don't recompute the pairdist."""
+    xm = kops.pairdist(x, plan.anchors, plan.metric, backend=backend)  # (n_loc, n)
     inside_k = (xm[:, None, :] >= plan.kernel_lo[None]) & (
         xm[:, None, :] < plan.kernel_hi[None]
     )
@@ -218,7 +230,7 @@ def _map_assign(plan: JoinPlan, x: Array, valid: Array, use_kernel: bool):
         (xm[:, None, :] >= plan.whole_lo[None]) & (xm[:, None, :] <= plan.whole_hi[None])
     ).all(-1)
     v = valid.astype(bool)
-    return cells, member & v[:, None], v
+    return cells, member & v[:, None], v, xm
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +238,13 @@ def _map_assign(plan: JoinPlan, x: Array, valid: Array, use_kernel: bool):
 # ---------------------------------------------------------------------------
 
 
-def make_stage_counts(mesh: Mesh, axis: str, plan: JoinPlan, use_kernel: bool = True):
+def make_stage_counts(
+    mesh: Mesh,
+    axis: str,
+    plan: JoinPlan,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+):
     """Returns jitted fn: (data, valid) ->
     (v_counts (M, p), w_counts (M, p), cell_lo (M, p, n), cell_hi (M, p, n)).
 
@@ -236,10 +254,10 @@ def make_stage_counts(mesh: Mesh, axis: str, plan: JoinPlan, use_kernel: bool = 
     distributed; Lemma 4 is preserved because every member stays inside its
     own cell's MBB)."""
     big = jnp.float32(partition.BIG)
+    backend = kops.resolve_backend(backend, plan.metric, use_kernel)
 
     def per_shard(x: Array, valid: Array):
-        cells, member, v = _map_assign(plan, x, valid, use_kernel)
-        xm = kops.pairdist(x, plan.anchors, plan.metric, use_kernel=use_kernel)
+        cells, member, v, xm = _map_assign(plan, x, valid, backend)
         v_cnt = jnp.zeros((plan.p,), jnp.int32).at[cells].add(v.astype(jnp.int32))
         w_cnt = member.sum(0).astype(jnp.int32)
         safe_cells = jnp.where(v, cells, plan.p)  # invalid -> dropped
@@ -252,7 +270,7 @@ def make_stage_counts(mesh: Mesh, axis: str, plan: JoinPlan, use_kernel: bool = 
             jax.lax.all_gather(hi, axis),
         )
 
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         per_shard, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(), P(), P(), P()),
         check_vma=False,
@@ -304,7 +322,8 @@ class VerifyConfig:
     cap_v: int  # per-(cell, source-shard) kernel-row capacity
     cap_w: int  # per-(cell, source-shard) whole-row capacity
     emit_pairs: bool = False  # also return hit masks + id buffers (tests)
-    use_kernel: bool = True
+    backend: str = "auto"  # numpy | pallas | auto (see kernels.ops)
+    use_kernel: bool | None = None  # legacy override of backend
 
 
 def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig):
@@ -321,9 +340,10 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
     assert p % M == 0, f"p={p} must be a multiple of mesh axis {axis}={M}"
     p_loc = p // M
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
+    backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
 
     def per_shard(x: Array, valid: Array, ids: Array):
-        cells, member, v = _map_assign(plan, x, valid, vcfg.use_kernel)
+        cells, member, v, _ = _map_assign(plan, x, valid, backend)
 
         # ---- V dispatch: each valid row -> its kernel cell ----------------
         v_cells = jnp.where(v, cells, p)
@@ -378,18 +398,15 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
         local_cells = my_dev * p_loc + jnp.arange(p_loc)  # global cell ids here
 
         # ---- verify each local cell: V_cell x W_cell -----------------------
+        # Distances, threshold, padding validity and the min-cell de-dup
+        # rule all live in repro.core.verify — the same code path the
+        # reference executor streams through.
         def verify_cell(vx, vids, vown, wx, wids, wown, cell_id):
-            hits = kops.pairdist_mask(
-                vx, wx, plan.delta, plan.metric, use_kernel=vcfg.use_kernel
+            mask = verify_lib.verify_tile(
+                vx, wx, vids, wids, wown, cell_id,
+                delta=plan.delta, metric=plan.metric, backend=backend,
             )
-            valid_pair = (vids[:, None] >= 0) & (wids[None, :] >= 0)
-            # De-dup (min-cell rule): emit at this cell iff the W row's own
-            # kernel cell is > this cell, or equal with id_v < id_w.
-            emit = (wown[None, :] > cell_id) | (
-                (wown[None, :] == cell_id) & (vids[:, None] < wids[None, :])
-            )
-            mask = hits & valid_pair & emit
-            n_verified = valid_pair.sum()
+            n_verified = verify_lib.pair_validity(vids, wids).sum()
             return mask, n_verified
 
         masks, n_verified = jax.vmap(verify_cell)(
@@ -417,7 +434,7 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
     if vcfg.emit_pairs:
         out_specs.update({"masks": P(axis), "v_ids": P(axis), "w_ids": P(axis)})
 
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
@@ -460,7 +477,8 @@ def distributed_join(
     partitioner: str = "learning",
     t_cells: int = 8,
     emit_pairs: bool = False,
-    use_kernel: bool = True,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
     capacity_slack: float = 1.0,
     tighten: bool = True,
     seed: int = 0,
@@ -472,7 +490,20 @@ def distributed_join(
     scheme). "distribution" (Alg. 2) is intentionally routed through the
     single-host executor; its comm pattern (sample rows on the wire) is what
     the generative scheme was designed to remove.
+
+    ``backend``: verify/mapping kernel dispatch ("numpy" | "pallas" | "auto");
+    the legacy ``use_kernel`` bool overrides it when given. Unlike the
+    single-host executor (whose verify engine falls back to the jnp path for
+    kernel-less metrics), the distributed stages require a kernel metric on
+    every path — fail fast with the supported set rather than deep in a
+    shard_map trace.
     """
+    if not kops.supports_kernel(metric):
+        raise ValueError(
+            f"distributed executor supports kernel metrics only ({kops.METRICS}); "
+            f"got {metric!r} — use repro.core.spjoin for reference-path metrics"
+        )
+    backend = kops.resolve_backend(backend, metric, use_kernel)
     M = mesh.shape[axis]
     key = jax.random.PRNGKey(seed)
     n, m = data.shape
@@ -490,7 +521,7 @@ def distributed_join(
     p = int(np.ceil(p / M) * M)
 
     # ---- sampling phase -----------------------------------------------------
-    stats_fn = make_stage_stats(mesh, axis, t_cells, use_kernel)
+    stats_fn = make_stage_stats(mesh, axis, t_cells, backend)
     packets, confs, counts = jax.tree.map(np.asarray, stats_fn(data, valid))
 
     k_gibbs, k_anchor = jax.random.split(key)
@@ -522,7 +553,7 @@ def distributed_join(
     )
 
     # ---- counting pass + capacity planning ----------------------------------
-    counts_fn = make_stage_counts(mesh, axis, plan, use_kernel)
+    counts_fn = make_stage_counts(mesh, axis, plan, backend)
     v_cnt, w_cnt, cell_lo, cell_hi = jax.tree.map(
         np.asarray, counts_fn(data, valid)
     )  # (M, p[, n])
@@ -540,7 +571,7 @@ def distributed_join(
             whole_hi=jnp.asarray(ghi + plan.delta, jnp.float32),
         )
         # W counts changed: one cheap recount against the tightened plan.
-        counts_fn = make_stage_counts(mesh, axis, plan, use_kernel)
+        counts_fn = make_stage_counts(mesh, axis, plan, backend)
         v_cnt, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(data, valid))
 
     exact_cap_v = max(int(v_cnt.max()), 1)
@@ -548,7 +579,7 @@ def distributed_join(
 
     # Cost-model prediction from the pivots alone (what a single-pass system
     # would have to provision) — reported for the EXPERIMENTS Table 3 story.
-    piv_mapped = kops.pairdist(pivots, plan.anchors, metric, use_kernel=use_kernel)
+    piv_mapped = kops.pairdist(pivots, plan.anchors, metric, backend=backend)
     piv_cells = partition.assign_kernel(
         partition.PartitionPlan(plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi, delta),
         piv_mapped,
@@ -566,7 +597,7 @@ def distributed_join(
     cap_w = int(np.ceil(exact_cap_w * capacity_slack))
 
     # ---- dispatch + verify ---------------------------------------------------
-    vcfg = VerifyConfig(cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, use_kernel=use_kernel)
+    vcfg = VerifyConfig(cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend)
     verify_fn = make_stage_verify(mesh, axis, plan, vcfg)
     out = verify_fn(data, valid, ids)
 

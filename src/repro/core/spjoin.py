@@ -6,8 +6,10 @@ Runs the full three-phase pipeline of Figure 1 on in-memory shards:
                    (repro.core.expfam / gof), then Random / Dist / Gen pivots
   map phase      — anchor selection, space mapping, partition tree
                    (Iter / Learn), kernel assignment + whole membership
-  reduce phase   — per-cell V_h × W_h verification (vectorized jnp; the
-                   Pallas kernel path is exercised by repro.core.distributed)
+  reduce phase   — per-cell V_h × W_h verification via the streaming tiled
+                   verify engine (repro.core.verify) — the same engine the
+                   distributed executor routes through, with
+                   backend="numpy"|"pallas"|"auto" dispatch
 
 This executor keeps dynamic shapes (host loops over cells) — it is the
 *semantic reference* the distributed static-shape executor and all benchmarks
@@ -29,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
+from repro.core import verify as verify_lib
 
 Array = jnp.ndarray
 
@@ -46,7 +49,15 @@ class JoinConfig:
     n_clusters: int | None = None  # labels for Learn (default: 2p)
     anchor_method: str = "fft"  # fft | random (paper)
     tighten: bool = True  # object-MBB tightening of whole boxes
+    backend: str = "auto"  # verify engine: numpy | pallas | auto
+    tile_v: int = 1024  # verify engine streaming tile (V side)
+    tile_w: int = 4096  # verify engine streaming tile (W side)
     seed: int = 0
+
+    def engine_config(self) -> verify_lib.EngineConfig:
+        return verify_lib.EngineConfig(
+            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w
+        )
 
 
 @dataclasses.dataclass
@@ -58,6 +69,7 @@ class JoinResult:
     sample_time_s: float
     map_time_s: float
     verify_time_s: float
+    verify_stats: verify_lib.VerifyStats | None = None  # engine telemetry
 
     @property
     def n_pairs(self) -> int:
@@ -164,43 +176,26 @@ def join(
     member = partition.whole_membership(plan, x_mapped)
     t_map = time.perf_counter() - t0
 
-    # ---- reduce phase ----------------------------------------------------
+    # ---- reduce phase: streaming tiled verify engine ---------------------
     t0 = time.perf_counter()
     cells_np = np.asarray(cells)
     member_np = np.asarray(member)
     stats = partition.partition_stats(cells_np, member_np)
-    n_verif = 0
-    pair_chunks: list[np.ndarray] = []
-    metric = distances.get_metric(cfg.metric)
-    for h in range(cfg.p):
-        v_idx = np.flatnonzero(cells_np == h)
-        w_idx = np.flatnonzero(member_np[:, h])
-        if v_idx.size == 0 or w_idx.size == 0:
-            continue
-        n_verif += int(v_idx.size) * int(w_idx.size)
-        d = np.asarray(metric.pairwise(allx[v_idx], allx[w_idx]))
-        hit_v, hit_w = np.nonzero(d <= cfg.delta)
-        gi = v_idx[hit_v]
-        gj = w_idx[hit_w]
-        cj = cells_np[gj]
-        # De-dup rule: emit in min-cell; same-cell pairs keep i < j.
-        keep = ((cj == h) & (gi < gj)) | (cj > h)
-        if return_pairs and keep.any():
-            pair_chunks.append(np.stack([gi[keep], gj[keep]], axis=1))
-    if pair_chunks:
-        pairs = np.unique(np.sort(np.concatenate(pair_chunks), axis=1), axis=0)
-    else:
-        pairs = np.zeros((0, 2), np.int64)
+    pairs, vstats = verify_lib.verify_pairs(
+        allx, cells_np, member_np, cfg.delta, cfg.metric,
+        config=cfg.engine_config(), return_pairs=return_pairs,
+    )
     t_verify = time.perf_counter() - t0
 
     return JoinResult(
-        pairs=pairs.astype(np.int64),
-        n_verifications=n_verif,
+        pairs=pairs,
+        n_verifications=vstats.n_verifications,
         cost=cost_model.partition_cost(stats["v_sizes"], stats["w_sizes"]),
         node_confidences=np.array([s.confidence for s in node_stats]),
         sample_time_s=t_sample,
         map_time_s=t_map,
         verify_time_s=t_verify,
+        verify_stats=vstats,
     )
 
 

@@ -1,10 +1,20 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Handles everything the raw kernels assume away: zero-padding to block
-multiples, cosine pre-normalization, backend dispatch (compiled Pallas on
-TPU, ``interpret=True`` elsewhere — the kernel body then runs as reference
-Python on CPU, which is how this container validates it), and an escape hatch
-``use_kernel=False`` that routes to the pure-jnp oracle for A/B testing.
+multiples, cosine pre-normalization, backend dispatch, and padding removal.
+
+Backend dispatch (``backend=`` on every wrapper):
+
+  "pallas"  the Pallas kernel — compiled on TPU, ``interpret=True`` elsewhere
+            (the kernel body then runs as reference Python on CPU, which is
+            how CI exercises the kernel path without an accelerator).
+  "numpy"   the pure-jnp oracle in ``ref.py`` (XLA-compiled when called under
+            jit — this is the CPU *fast* path, not just a debug path).
+  "auto"    "pallas" on TPU, "numpy" elsewhere; metrics without a kernel
+            always resolve to "numpy".
+
+The legacy ``use_kernel`` bool is still accepted everywhere and, when given,
+overrides ``backend`` (True -> "pallas", False -> "numpy").
 """
 from __future__ import annotations
 
@@ -20,10 +30,41 @@ from repro.kernels import ref
 Array = jnp.ndarray
 
 METRICS = _pairdist.METRICS
+BACKENDS = ("numpy", "pallas", "auto")
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def supports_kernel(metric: str) -> bool:
+    """True when ``metric`` has a Pallas kernel implementation."""
+    return metric in METRICS
+
+
+def resolve_backend(
+    backend: str = "auto", metric: str | None = None, use_kernel: bool | None = None
+) -> str:
+    """Resolve a backend request to a concrete "numpy" | "pallas".
+
+    ``use_kernel`` (legacy bool) wins over ``backend`` when not None. "auto"
+    picks the kernel only on TPU; explicitly asking for "pallas" with a metric
+    that has no kernel is an error (callers that want graceful fallback go
+    through "auto" or check :func:`supports_kernel` first).
+    """
+    if use_kernel is not None:
+        backend = "pallas" if use_kernel else "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "auto":
+        if metric is not None and not supports_kernel(metric):
+            return "numpy"
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    if backend == "pallas" and metric is not None and not supports_kernel(metric):
+        raise ValueError(
+            f"metric {metric!r} has no Pallas kernel; supported: {METRICS}"
+        )
+    return backend
 
 
 def _pad_to(x: Array, mult: int, axis: int) -> Array:
@@ -48,7 +89,9 @@ def _prep(x: Array, y: Array, metric: str, bv: int, bw: int, bm: int):
     return xp, yp
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "bv", "bw", "bm", "use_kernel"))
+@functools.partial(
+    jax.jit, static_argnames=("metric", "bv", "bw", "bm", "backend", "use_kernel")
+)
 def pairdist(
     x: Array,
     y: Array,
@@ -57,10 +100,11 @@ def pairdist(
     bv: int = 128,
     bw: int = 128,
     bm: int | None = None,
-    use_kernel: bool = True,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
 ) -> Array:
     """All-pairs distance matrix (a, b) float32."""
-    if not use_kernel:
+    if resolve_backend(backend, metric, use_kernel) == "numpy":
         return ref.pairdist(x, y, metric)
     if bm is None:
         bm = 128 if metric in _pairdist.MXU_METRICS else 16
@@ -74,7 +118,8 @@ def pairdist(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("metric", "delta", "bv", "bw", "bm", "use_kernel")
+    jax.jit,
+    static_argnames=("metric", "delta", "bv", "bw", "bm", "backend", "use_kernel"),
 )
 def pairdist_mask(
     x: Array,
@@ -85,10 +130,11 @@ def pairdist_mask(
     bv: int = 128,
     bw: int = 128,
     bm: int | None = None,
-    use_kernel: bool = True,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
 ) -> Array:
     """Fused thresholded join mask (a, b) bool — distances never hit HBM."""
-    if not use_kernel:
+    if resolve_backend(backend, metric, use_kernel) == "numpy":
         return ref.pairdist_mask(x, y, delta, metric)
     if bm is None:
         bm = 128 if metric in _pairdist.MXU_METRICS else 16
@@ -110,17 +156,25 @@ def pairdist_mask(
     return out[:a, :b].astype(bool)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "delta", "use_kernel"))
+@functools.partial(
+    jax.jit, static_argnames=("metric", "delta", "backend", "use_kernel")
+)
 def pairdist_count(
-    x: Array, y: Array, delta: float, metric: str = "l2", *, use_kernel: bool = True
+    x: Array,
+    y: Array,
+    delta: float,
+    metric: str = "l2",
+    *,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
 ) -> Array:
     """Per-row join fan-out counts (a,) int32."""
-    return pairdist_mask(x, y, delta, metric, use_kernel=use_kernel).sum(-1).astype(
-        jnp.int32
-    )
+    return pairdist_mask(
+        x, y, delta, metric, backend=backend, use_kernel=use_kernel
+    ).sum(-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "bn", "bmm", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("t", "bn", "bmm", "backend", "use_kernel"))
 def histogram(
     u: Array,
     t: int,
@@ -128,10 +182,11 @@ def histogram(
     *,
     bn: int = 256,
     bmm: int = 8,
-    use_kernel: bool = True,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
 ) -> Array:
     """Per-dimension histogram (m, t) of CDF-space values u: (n, m)."""
-    if not use_kernel:
+    if resolve_backend(backend, use_kernel=use_kernel) == "numpy":
         return ref.histogram(u, t, weights)
     n, m = u.shape
     w = jnp.ones((n, 1), jnp.float32) if weights is None else weights.reshape(n, 1)

@@ -1,0 +1,112 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The real hypothesis is a declared test dependency (``pip install -e
+.[test]`` — what CI does). Environments without it (e.g. hermetic
+containers) still need the suite to *collect and pass*, so
+``tests/conftest.py`` appends this stub directory to ``sys.path`` only when
+the real import fails. It implements exactly the surface this repo's tests
+use:
+
+  @given over positional/keyword strategies, @settings(max_examples,
+  deadline) in either decorator order, assume(), and
+  strategies.{integers, floats, sampled_from, lists, text}.
+
+Draws are deterministic (seeded per test function) so failures reproduce;
+there is no shrinking — the real library remains the CI gate.
+"""
+from __future__ import annotations
+
+import random
+
+__version__ = "0.0.0-repro-stub"
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class settings:
+    """Decorator/record: only max_examples and deadline are honored."""
+
+    _profiles: dict = {}
+    _active: dict = {}
+
+    def __init__(self, max_examples=None, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = dict(cls._profiles.get(name, {}))
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def given(*pos_strategies, **kw_strategies):
+    def decorate(fn):
+        # NOT functools.wraps: pytest must see a (*args, **kwargs) signature,
+        # otherwise it tries to resolve the strategy parameters as fixtures.
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", None
+            )
+            n = None if conf is None else conf.max_examples
+            if n is None:
+                n = settings._active.get("max_examples", 20)
+            n = max(1, int(n))
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = attempts = 0
+            while ran < n and attempts < 10 * n:
+                attempts += 1
+                pos = [s.example(rng) for s in pos_strategies]
+                kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *pos, **kw, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+            if ran == 0:
+                # Mirror real hypothesis's filter_too_much health check: a
+                # property that never executed must not report green.
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume()/filter satisfied 0 of "
+                    f"{attempts} draws — property never executed"
+                )
+            return None
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._stub_settings = getattr(fn, "_stub_settings", None)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+from . import strategies  # noqa: E402  (needs given/settings defined first)
+
+__all__ = ["given", "settings", "strategies", "assume", "HealthCheck"]

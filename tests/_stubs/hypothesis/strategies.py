@@ -1,0 +1,94 @@
+"""Strategy objects for the hypothesis stub: deterministic, boundary-biased.
+
+Each strategy exposes ``example(rng)``; ~15% of draws hit a range boundary so
+edge cases surface even without real hypothesis's coverage-guided search.
+"""
+from __future__ import annotations
+
+import string
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter_too_much: predicate rarely satisfied")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.08:
+            return lo
+        if r < 0.15:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.08:
+            return lo
+        if r < 0.15:
+            return hi
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements, min_size=0, max_size=10, **_ignored):
+    def draw(rng):
+        size = rng.randint(int(min_size), int(max_size))
+        return [elements.example(rng) for _ in range(size)]
+
+    return SearchStrategy(draw)
+
+
+def text(alphabet=string.ascii_lowercase, min_size=0, max_size=10, **_ignored):
+    pool = list(alphabet)
+
+    def draw(rng):
+        size = rng.randint(int(min_size), int(max_size))
+        return "".join(pool[rng.randrange(len(pool))] for _ in range(size))
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)

@@ -1,6 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
 benches must see the real single device; multi-device tests spawn
-subprocesses that set --xla_force_host_platform_device_count themselves."""
+subprocesses that set --xla_force_host_platform_device_count themselves.
+
+Hypothesis: the real library is a declared test dependency (CI installs it
+via ``pip install -e .[test]``). When it is absent — hermetic containers
+with no network — we fall back to the deterministic stub in ``tests/_stubs``
+so the suite still collects and passes. CI selects the lighter ``ci``
+profile (fewer examples, no deadline) via HYPOTHESIS_PROFILE=ci."""
 import os
 import sys
 
@@ -8,6 +14,19 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))
+    import hypothesis  # noqa: F401
+
+from hypothesis import settings as _hyp_settings  # noqa: E402
+
+_hyp_settings.register_profile("ci", max_examples=10, deadline=None)
+_hyp_settings.register_profile("nightly", max_examples=100, deadline=None)
+if os.environ.get("HYPOTHESIS_PROFILE"):
+    _hyp_settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 
 
 @pytest.fixture

@@ -1,4 +1,7 @@
-"""Pallas kernel sweeps: every (shape, dtype, metric) cell vs the jnp oracle."""
+"""Pallas kernel sweeps: every (shape, dtype, metric) cell vs the jnp oracle.
+
+backend="pallas" is pinned everywhere: the "auto" default resolves to the
+jnp oracle off-TPU, which would compare the oracle against itself."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +18,7 @@ def test_pairdist_matches_ref(metric, a, b, m, rng):
     x = jnp.asarray(rng.normal(size=(a, m)), jnp.float32)
     y = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
     np.testing.assert_allclose(
-        ops.pairdist(x, y, metric), ref.pairdist(x, y, metric), rtol=1e-5, atol=1e-5
+        ops.pairdist(x, y, metric, backend="pallas"), ref.pairdist(x, y, metric), rtol=1e-5, atol=1e-5
     )
 
 
@@ -27,7 +30,7 @@ def test_pairdist_mask_matches_ref(metric, a, b, m, rng):
     d = np.asarray(ref.pairdist(x, y, metric))
     for q in (0.1, 0.5, 0.9):
         delta = float(np.quantile(d, q))
-        got = np.asarray(ops.pairdist_mask(x, y, delta, metric))
+        got = np.asarray(ops.pairdist_mask(x, y, delta, metric, backend="pallas"))
         want = np.asarray(ref.pairdist_mask(x, y, delta, metric))
         # threshold-boundary ties can flip with fp reassociation; tolerate
         # only exact-boundary disagreements
@@ -40,7 +43,7 @@ def test_pairdist_mask_matches_ref(metric, a, b, m, rng):
 def test_pairdist_dtypes(dtype, rng):
     x = jnp.asarray(rng.normal(size=(64, 32)), dtype)
     y = jnp.asarray(rng.normal(size=(48, 32)), dtype)
-    got = ops.pairdist(x, y, "l2")
+    got = ops.pairdist(x, y, "l2", backend="pallas")
     want = ref.pairdist(x.astype(jnp.float32), y.astype(jnp.float32), "l2")
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
@@ -50,7 +53,8 @@ def test_pairdist_count(rng):
     x = jnp.asarray(rng.normal(size=(40, 8)), jnp.float32)
     y = jnp.asarray(rng.normal(size=(30, 8)), jnp.float32)
     np.testing.assert_array_equal(
-        ops.pairdist_count(x, y, 2.5, "l1"), ref.pairdist_count(x, y, 2.5, "l1")
+        ops.pairdist_count(x, y, 2.5, "l1", backend="pallas"),
+        ref.pairdist_count(x, y, 2.5, "l1"),
     )
 
 
@@ -58,9 +62,11 @@ def test_pairdist_count(rng):
 def test_histogram_matches_ref(n, m, t, rng):
     u = jnp.asarray(rng.uniform(size=(n, m)), jnp.float32)
     w = jnp.asarray(rng.integers(0, 2, size=(n,)), jnp.float32)
-    np.testing.assert_allclose(ops.histogram(u, t), ref.histogram(u, t), atol=1e-6)
     np.testing.assert_allclose(
-        ops.histogram(u, t, w), ref.histogram(u, t, w), atol=1e-6
+        ops.histogram(u, t, backend="pallas"), ref.histogram(u, t), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        ops.histogram(u, t, w, backend="pallas"), ref.histogram(u, t, w), atol=1e-6
     )
 
 
@@ -76,3 +82,33 @@ def test_kernel_vs_oracle_consistency_in_join_path(rng):
     a = np.asarray(ops.pairdist(x, x[:10], "l1", use_kernel=True))
     b = np.asarray(ops.pairdist(x, x[:10], "l1", use_kernel=False))
     np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_backend_dispatch_resolution():
+    """The backend="numpy"|"pallas"|"auto" contract (off-TPU container)."""
+    import jax
+
+    on_tpu = jax.default_backend() == "tpu"
+    assert ops.resolve_backend("numpy") == "numpy"
+    assert ops.resolve_backend("pallas", "l1") == "pallas"
+    assert ops.resolve_backend("auto", "l2") == ("pallas" if on_tpu else "numpy")
+    # metrics without a kernel always fall back under "auto"
+    assert ops.resolve_backend("auto", "jaccard_minhash") == "numpy"
+    # legacy use_kernel overrides backend
+    assert ops.resolve_backend("numpy", "l1", use_kernel=True) == "pallas"
+    assert ops.resolve_backend("pallas", "l1", use_kernel=False) == "numpy"
+    with pytest.raises(ValueError):
+        ops.resolve_backend("pallas", "jaccard_minhash")
+    with pytest.raises(ValueError):
+        ops.resolve_backend("mlx")
+
+
+def test_backend_paths_agree(rng):
+    x = jnp.asarray(rng.normal(size=(70, 9)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(40, 9)), jnp.float32)
+    for metric in ("l1", "l2"):
+        a = np.asarray(ops.pairdist(x, y, metric, backend="pallas"))
+        b = np.asarray(ops.pairdist(x, y, metric, backend="numpy"))
+        c = np.asarray(ops.pairdist(x, y, metric, backend="auto"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(b, c, rtol=1e-5, atol=1e-5)

@@ -60,6 +60,8 @@ def test_mapping_is_lipschitz(rng):
             assert (np.abs(xm[i] - xm[j]) <= d[i, j] + 1e-4).all()
 
 
+@pytest.mark.slow  # long property sweep (~30s): nightly tier; the fast tier
+# covers the same invariant via tests/test_verify_engine.py parity tests
 @settings(max_examples=12, deadline=None)
 @given(
     seed=st.integers(0, 10_000),
