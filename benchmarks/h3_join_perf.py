@@ -1,6 +1,6 @@
 """Hillclimb H3 (§Perf): the distributed SP-Join pipeline + the verify engine.
 
-Two sections:
+Sections (``--rs`` adds a third):
 
 1. distributed — per-arm wall time of the 8-device shard_map pipeline
    (real wall clock; base / tighten / p-sweep arms), run in a subprocess so
@@ -10,13 +10,17 @@ Two sections:
    engine (``verify.verify_pairs``, numpy backend = jitted/fused XLA) on one
    shared partition plan. Reports speedup, tile/bucket counts and padding
    occupancy. Acceptance floor: engine >= 2x at N >= 20k on CPU.
+3. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
+   (the skew-sensitive case), exactness-checked in-subprocess against the
+   brute-force cross oracle; reports wall time, W capacity and the S-side
+   duplication metric Σ|W_h|/|S|.
 
 Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
-smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke`` must
-run to completion and write it).
+smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke --rs``
+must run to completion and write it).
 
 Run:
-    PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke]
+    PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke] [--rs]
 """
 from __future__ import annotations
 
@@ -64,8 +68,36 @@ print(json.dumps(out))
 """
 
 
-def run_distributed(n: int, delta: float, arms) -> list[dict]:
-    prog = _SUB.format(n=n, delta=delta, arms=repr(arms))
+_SUB_RS = """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import json, time, numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed, spjoin
+from repro.data import synthetic
+
+mesh = jax.make_mesh((8,), ("data",))
+# Asymmetric |R| << |S| — the skew-sensitive cross-join case: every R row
+# fans out against a much larger S side, so W capacity planning dominates.
+r, s = synthetic.rs_mixture({n_r}, {n_s}, 12, n_clusters=6, skew=0.5, seed=0)
+walls = []
+for rep in range(2):  # rep 0 warms compile caches; rep 1 is steady state
+    t0 = time.perf_counter()
+    res = distributed.distributed_join(
+        jnp.asarray(r), s=jnp.asarray(s), mesh=mesh, delta={delta},
+        metric="l1", k=256, p=16, n_dims=6, sampler="generative",
+        backend="numpy", emit_pairs=True, seed=0)
+    walls.append(time.perf_counter() - t0)
+truth = spjoin.brute_force_pairs(r, {delta}, "l1", s=s)
+assert np.array_equal(res.pairs, truth), (res.pairs.shape, truth.shape)
+print(json.dumps(dict(
+    label="rs", n_r={n_r}, n_s={n_s}, wall_cold_s=walls[0], wall_s=walls[-1],
+    pairs=int(res.pairs.shape[0]), verif=res.n_verifications,
+    cap_w=res.exact_cap_w, padding=res.capacity_padding,
+    duplication=res.duplication, exact=True)))
+"""
+
+
+def _run_sub(prog: str):
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = {"PYTHONPATH": os.path.join(root, "src"), "PATH": "/usr/bin:/bin",
            "HOME": os.environ.get("HOME", "/root")}
@@ -77,6 +109,15 @@ def run_distributed(n: int, delta: float, arms) -> list[dict]:
     )
     assert res.returncode == 0, res.stderr[-3000:]
     return json.loads(res.stdout.splitlines()[-1])
+
+
+def run_rs(n_r: int, n_s: int, delta: float) -> dict:
+    """The R×S arm: exactness-checked cross join with |R| << |S|."""
+    return _run_sub(_SUB_RS.format(n_r=n_r, n_s=n_s, delta=delta))
+
+
+def run_distributed(n: int, delta: float, arms) -> list[dict]:
+    return _run_sub(_SUB.format(n=n, delta=delta, arms=repr(arms)))
 
 
 def run_verify_engine(n: int, delta: float) -> dict:
@@ -134,7 +175,7 @@ def run_verify_engine(n: int, delta: float) -> dict:
 
 
 def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
-        smoke: bool = False) -> dict:
+        smoke: bool = False, rs: bool = False) -> dict:
     if smoke:
         # Smoke shrinks only sizes the caller left at their defaults, so
         # `--smoke --n-verify 50000` still measures the requested N.
@@ -166,6 +207,20 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
     csv2.close()
 
     report = dict(smoke=smoke, distributed=rows, verify_engine=engine)
+
+    if rs:
+        # Asymmetric two-set arm: |R| = n/5 against |S| = n, exactness-checked
+        # against the brute-force cross oracle inside the subprocess.
+        rs_row = run_rs(max(n // 5, 16), n, delta)
+        csv3 = Csv("bench_h3_rs.csv",
+                   ["n_r", "n_s", "wall_warm_s", "wall_cold_s", "pairs",
+                    "verifications", "cap_w", "padding", "duplication"])
+        csv3.row(rs_row["n_r"], rs_row["n_s"], round(rs_row["wall_s"], 2),
+                 round(rs_row["wall_cold_s"], 2), rs_row["pairs"],
+                 rs_row["verif"], rs_row["cap_w"],
+                 round(rs_row["padding"], 2), round(rs_row["duplication"], 3))
+        csv3.close()
+        report["rs"] = rs_row
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, "h3_perf.json")
     with open(path, "w") as f:
@@ -183,5 +238,9 @@ if __name__ == "__main__":
     ap.add_argument("--n-verify", type=int, default=20_000,
                     help="verify-engine-section dataset size")
     ap.add_argument("--delta", type=float, default=6.0)
+    ap.add_argument("--rs", action="store_true",
+                    help="also run the asymmetric R×S cross-join arm "
+                         "(|R| = n/5 vs |S| = n, exactness-checked)")
     args = ap.parse_args()
-    run(n=args.n, delta=args.delta, n_verify=args.n_verify, smoke=args.smoke)
+    run(n=args.n, delta=args.delta, n_verify=args.n_verify, smoke=args.smoke,
+        rs=args.rs)

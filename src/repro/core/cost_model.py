@@ -50,6 +50,30 @@ def partition_cost(v_sizes: np.ndarray, w_sizes: np.ndarray) -> PartitionCost:
     )
 
 
+def rs_partition_cost(
+    v_sizes: np.ndarray, w_sizes: np.ndarray, n_s: int
+) -> PartitionCost:
+    """Eq. 33 instantiated for a two-set R×S join.
+
+    ``v_sizes[h]`` = |V_h| (R rows whose kernel cell is h), ``w_sizes[h]`` =
+    |W_h| (S rows whole-member of h). Every verification crosses the sets, so
+    the "inner" (same-set) term vanishes and G = Σ_h |V_h|·|W_h| is all
+    outer cost. ``duplication`` is the shuffle amplification of the S side,
+    Σ_h |W_h| / |S| — how many copies of each S row cross the wire.
+    """
+    v = np.asarray(v_sizes, np.float64)
+    w = np.asarray(w_sizes, np.float64)
+    per_cell = v * w
+    return PartitionCost(
+        inner=0.0,
+        outer=float(per_cell.sum()),
+        total=float(per_cell.sum()),
+        max_cell=float(per_cell.max(initial=0.0)),
+        balance_std=float(per_cell.std()),
+        duplication=float(w.sum() / max(float(n_s), 1.0)),
+    )
+
+
 def lower_bound_inner(n_total: int, p: int) -> float:
     """Eq. 34: Σ|V_h|² ≥ N²/p — the even-partition floor."""
     return float(n_total) ** 2 / max(p, 1)

@@ -109,12 +109,48 @@ def pairwise(x: Array, y: Array, metric: str = "l1") -> Array:
     return get_metric(metric).pairwise(x, y)
 
 
-def brute_force_join(x: Array, delta: float, metric: str = "l1") -> Array:
-    """Oracle self-join: boolean (n, n) matrix, True where D(o_i,o_j) ≤ δ, i < j.
+def brute_force_join(x: Array, *args, **kwargs) -> Array:
+    """Oracle join — ground truth for tests/benchmarks (quadratic).
 
-    Used only by tests/benchmarks as ground truth (quadratic)."""
-    d = pairwise(x, x, metric)
-    n = x.shape[0]
-    iu = jnp.triu_indices(n, k=1)
-    mask = jnp.zeros((n, n), bool).at[iu].set(True)
-    return (d <= delta) & mask
+    Two call forms, overloaded on whether the second argument is a set:
+
+      brute_force_join(x, delta[, metric])
+          self-join: boolean (n, n) matrix, True where D(o_i, o_j) ≤ δ, i < j.
+      brute_force_join(r, s, delta[, metric])
+          cross R×S join: boolean (n_r, n_s) matrix, True where
+          D(r_i, s_j) ≤ δ — no triangular de-dup, (i, j) index different sets.
+    """
+    y = kwargs.pop("s", None)
+    delta = kwargs.pop("delta", None)
+    metric = kwargs.pop("metric", None)
+    if kwargs:
+        raise TypeError(f"unexpected keyword arguments {sorted(kwargs)}")
+    pos = list(args)
+    # Cross form iff the second positional is a set — always (n, m); scalars
+    # (and anything else) route to delta, so a stray 0-d array can't misroute.
+    if pos and jnp.ndim(pos[0]) == 2:
+        if y is not None:
+            raise TypeError("brute_force_join got multiple values for s")
+        y = pos.pop(0)
+    if pos:
+        if delta is not None:
+            raise TypeError("brute_force_join got multiple values for delta")
+        delta = pos.pop(0)
+    if pos:
+        if metric is not None:
+            raise TypeError("brute_force_join got multiple values for metric")
+        metric = pos.pop(0)
+    if pos:
+        raise TypeError("too many positional arguments")
+    if delta is None:
+        raise TypeError("brute_force_join requires a delta threshold")
+    metric = metric or "l1"
+    if y is None:
+        d = pairwise(x, x, metric)
+        n = x.shape[0]
+        iu = jnp.triu_indices(n, k=1)
+        mask = jnp.zeros((n, n), bool).at[iu].set(True)
+        return (d <= delta) & mask
+    if x.shape[0] == 0 or y.shape[0] == 0:
+        return jnp.zeros((x.shape[0], y.shape[0]), bool)
+    return pairwise(x, y, metric) <= delta

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -147,7 +148,10 @@ def gibbs_from_packets(
     Deterministic in (key, packets): every host/device replays the identical
     chain, so pivots are replicated without communication. Acceptance runs
     on max-normalized confidences (scale-invariant for the C=1 branch; see
-    sampling.gibbs_chain)."""
+    sampling.gibbs_chain). Shortfall/zero-accept compaction is shared with
+    the single-host chain (sampling._compact_accepted): tail slots repeat the
+    first ACCEPTED row, and an all-rejected chain falls back to the raw
+    draws with acceptance telemetry = 0.0 so the driver can warn."""
     conf = jnp.clip(confs.astype(jnp.float32), 1e-6, 1.0)
     conf = jnp.clip(conf / jnp.max(conf), 1e-3, 1.0)
     cnt = jnp.maximum(counts.astype(jnp.float32), 1.0)
@@ -163,11 +167,7 @@ def gibbs_from_packets(
         return c, (x, c)
 
     _, (xs, cs) = jax.lax.scan(step, jnp.int32(1), jax.random.split(key, length))
-    accepted = cs == 1
-    order = jnp.argsort(~accepted, stable=True)
-    take = order[:k]
-    take = jnp.where(accepted[take], take, take[0])
-    return xs[take], accepted.mean()
+    return sampling._compact_accepted(xs, cs == 1, k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,7 +326,9 @@ class VerifyConfig:
     use_kernel: bool | None = None  # legacy override of backend
 
 
-def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig):
+def make_stage_verify(
+    mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig, cross: bool = False
+):
     """The fused map+shuffle+reduce stage.
 
     Per shard: assign -> dispatch buffers keyed (dest cell, slot) ->
@@ -334,6 +336,13 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
 
     Cell -> device: cell h lives on device h // cells_per_dev; requires
     p % M == 0 (the driver rounds p up).
+
+    ``cross=False`` (self-join): V and W buffers are both scattered from the
+    one data set; the min-cell de-dup rule applies. ``cross=True`` (R×S):
+    the stage takes (xr, valid_r, ids_r, xs, valid_s, ids_s) — V buffers are
+    scattered from R's shards (kernel cells), W buffers from S's shards
+    (whole membership), one ``all_to_all`` each, and the de-dup rule
+    degenerates to padding validity (each R row has a unique kernel cell).
     """
     M = mesh.shape[axis]
     p = plan.p
@@ -342,15 +351,19 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
     backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
 
-    def per_shard(x: Array, valid: Array, ids: Array):
-        cells, member, v, _ = _map_assign(plan, x, valid, backend)
-
-        # ---- V dispatch: each valid row -> its kernel cell ----------------
+    def v_dispatch(x: Array, ids: Array, cells: Array, v: Array):
+        """Each valid row -> its kernel cell."""
         v_cells = jnp.where(v, cells, p)
         v_buf, v_ids, v_own = _scatter_dispatch(x, ids, v_cells, cells, p, cap_v)
+        overflow_v = (v & (v_cells < p)
+                      & (jnp.take_along_axis(jnp.cumsum(
+                          (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32),
+                          axis=0) - 1, jnp.clip(v_cells, 0, p - 1)[:, None], 1)[:, 0]
+                         >= cap_v)).sum()
+        return v_buf, v_ids, v_own, overflow_v
 
-        # ---- W dispatch: each valid row -> every member cell ---------------
-        # Flatten (row, cell) membership pairs into per-cell ranked slots.
+    def w_dispatch(x: Array, ids: Array, cells: Array, member: Array):
+        """Each valid row -> every whole-member cell (ranked slots)."""
         w_rank = jnp.cumsum(member.astype(jnp.int32), axis=0) - 1  # (n_loc, p)
         slot_ok = member & (w_rank < cap_w)
         cc = jnp.where(slot_ok, jnp.arange(p)[None, :], p)  # (n_loc, p)
@@ -371,40 +384,35 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
             .set(jnp.broadcast_to(cells[:, None], cc.shape), mode="drop")
         )
         overflow_w = (member & (w_rank >= cap_w)).sum()
-        overflow_v = (v & (v_cells < p)
-                      & (jnp.take_along_axis(jnp.cumsum(
-                          (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32),
-                          axis=0) - 1, jnp.clip(v_cells, 0, p - 1)[:, None], 1)[:, 0]
-                         >= cap_v)).sum()
+        return w_buf, w_ids, w_own, overflow_w
 
-        # ---- shuffle: ONE all_to_all over the data axis --------------------
+    def shuffle_and_verify(v_parts, w_parts, overflow):
+        """ONE all_to_all per side over the data axis, then per-local-cell
+        masked blocked verification."""
         def exchange(buf):
             # (p, cap, ...) -> (M, p_loc, cap, ...) -> a2a -> received from
             # every source shard: (M, p_loc, cap, ...).
             shaped = buf.reshape(M, p_loc, *buf.shape[1:])
             return jax.lax.all_to_all(shaped, axis, split_axis=0, concat_axis=0)
 
-        rv, rvi, rvo = exchange(v_buf), exchange(v_ids), exchange(v_own)
-        rw, rwi, rwo = exchange(w_buf), exchange(w_ids), exchange(w_own)
-
         # -> per local cell: (p_loc, M*cap, ...)
         def flat(r):
             return jnp.moveaxis(r, 0, 1).reshape(p_loc, M * r.shape[2], *r.shape[3:])
 
-        fv, fvi, fvo = flat(rv), flat(rvi), flat(rvo)
-        fw, fwi, fwo = flat(rw), flat(rwi), flat(rwo)
+        fv, fvi, fvo = (flat(exchange(b)) for b in v_parts)
+        fw, fwi, fwo = (flat(exchange(b)) for b in w_parts)
 
         my_dev = jax.lax.axis_index(axis)
         local_cells = my_dev * p_loc + jnp.arange(p_loc)  # global cell ids here
 
-        # ---- verify each local cell: V_cell x W_cell -----------------------
-        # Distances, threshold, padding validity and the min-cell de-dup
-        # rule all live in repro.core.verify — the same code path the
-        # reference executor streams through.
+        # Distances, threshold, padding validity and the de-dup rule all
+        # live in repro.core.verify — the same code path the reference
+        # executor streams through.
         def verify_cell(vx, vids, vown, wx, wids, wown, cell_id):
             mask = verify_lib.verify_tile(
                 vx, wx, vids, wids, wown, cell_id,
                 delta=plan.delta, metric=plan.metric, backend=backend,
+                cross=cross,
             )
             n_verified = verify_lib.pair_validity(vids, wids).sum()
             return mask, n_verified
@@ -417,13 +425,36 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
             "hits": hit_count.astype(jnp.float32)[None],
             "verified": n_verified.sum().astype(jnp.float32)[None],
             "per_cell_verified": n_verified.astype(jnp.float32),
-            "overflow": (overflow_v + overflow_w).astype(jnp.float32)[None],
+            "overflow": overflow.astype(jnp.float32)[None],
         }
         if vcfg.emit_pairs:
             out["masks"] = masks  # (p_loc, M*cap_v, M*cap_w)
             out["v_ids"] = fvi
             out["w_ids"] = fwi
         return out
+
+    if cross:
+        def per_shard(xr: Array, valid_r: Array, ids_r: Array,
+                      xs: Array, valid_s: Array, ids_s: Array):
+            cells_r, _, v_r, _ = _map_assign(plan, xr, valid_r, backend)
+            cells_s, member_s, _, _ = _map_assign(plan, xs, valid_s, backend)
+            v_buf, v_ids, v_own, overflow_v = v_dispatch(xr, ids_r, cells_r, v_r)
+            w_buf, w_ids, w_own, overflow_w = w_dispatch(xs, ids_s, cells_s, member_s)
+            return shuffle_and_verify(
+                (v_buf, v_ids, v_own), (w_buf, w_ids, w_own),
+                overflow_v + overflow_w,
+            )
+        in_specs = (P(axis),) * 6
+    else:
+        def per_shard(x: Array, valid: Array, ids: Array):
+            cells, member, v, _ = _map_assign(plan, x, valid, backend)
+            v_buf, v_ids, v_own, overflow_v = v_dispatch(x, ids, cells, v)
+            w_buf, w_ids, w_own, overflow_w = w_dispatch(x, ids, cells, member)
+            return shuffle_and_verify(
+                (v_buf, v_ids, v_own), (w_buf, w_ids, w_own),
+                overflow_v + overflow_w,
+            )
+        in_specs = (P(axis),) * 3
 
     out_specs = {
         "hits": P(axis),
@@ -437,7 +468,7 @@ def make_stage_verify(mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig)
     shmap = compat.shard_map(
         per_shard,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_vma=False,
     )
@@ -460,7 +491,26 @@ class DistJoinResult:
     exact_cap_w: int
     node_confidences: np.ndarray
     accept_rate: float
-    pairs: np.ndarray | None = None  # (n_pairs, 2) when emit_pairs
+    pairs: np.ndarray | None = None  # (n_pairs, 2) when emit_pairs; self-join
+    #   columns are (min, max) over one set — R×S: (i ∈ R, j ∈ S)
+    duplication: float = 0.0  # Σ|W_h| / |S| (|S|=N for self) — shuffle amp.
+
+
+def _pad_shard_set(x: Array, M: int, sharding) -> tuple[Array, Array, Array, int]:
+    """Pad a set to a multiple of M rows (≥ M, so empty sets still shard),
+    build validity + global-id vectors, and device_put all three."""
+    n, m = x.shape
+    pad = (-n) % M or (M if n == 0 else 0)
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, m), x.dtype)])
+    valid = (jnp.arange(n + pad) < n).astype(jnp.float32)
+    ids = jnp.arange(n + pad, dtype=jnp.int32)
+    return (
+        jax.device_put(x, sharding),
+        jax.device_put(valid, sharding),
+        jax.device_put(ids, sharding),
+        n,
+    )
 
 
 def distributed_join(
@@ -482,8 +532,18 @@ def distributed_join(
     capacity_slack: float = 1.0,
     tighten: bool = True,
     seed: int = 0,
+    s: Array | None = None,
 ) -> DistJoinResult:
-    """End-to-end distributed self-join of ``data`` (N, m) on ``mesh``.
+    """End-to-end distributed join of ``data`` (N, m) on ``mesh``.
+
+    Self-join by default. Pass ``s`` (N_s, m) for the two-set R×S join:
+    ``data`` is R, ``s`` is S; per-set stats are gathered and pooled (2M
+    "local nodes") so pivots cover both distributions, the counting pass and
+    exact-fit capacities are computed per set (V capacity from R's kernel
+    counts, W capacity from S's whole counts), and the verify stage scatters
+    V buffers from R's shards and W buffers from S's — one ``all_to_all``
+    each. ``emit_pairs`` then yields (i ∈ R, j ∈ S) pairs. Passing the same
+    object as both (R = S aliasing) routes through the self-join path.
 
     ``sampler``: "generative" (default, Alg. 3/4) or "random" (baseline —
     pivots drawn uniformly from an all-gathered subsample, the prior-work
@@ -503,19 +563,23 @@ def distributed_join(
             f"distributed executor supports kernel metrics only ({kops.METRICS}); "
             f"got {metric!r} — use repro.core.spjoin for reference-path metrics"
         )
+    if s is data:
+        s = None  # R = S aliasing: the canonical semantics is the self-join
+    cross = s is not None
     backend = kops.resolve_backend(backend, metric, use_kernel)
     M = mesh.shape[axis]
     key = jax.random.PRNGKey(seed)
     n, m = data.shape
-    pad = (-n) % M
-    if pad:
-        data = jnp.concatenate([data, jnp.zeros((pad, m), data.dtype)])
-    valid = (jnp.arange(n + pad) < n).astype(jnp.float32)
-    ids = jnp.arange(n + pad, dtype=jnp.int32)
+    # Pre-padding host pools, only materialized for the random sampler (the
+    # generative default never moves sample rows off-device).
+    r_host = np.asarray(data) if sampler == "random" else None
     sharding = NamedSharding(mesh, P(axis))
-    data = jax.device_put(data, sharding)
-    valid = jax.device_put(valid, sharding)
-    ids = jax.device_put(ids, sharding)
+    data, valid, ids, _ = _pad_shard_set(jnp.asarray(data), M, sharding)
+    if cross:
+        s_host = np.asarray(s) if sampler == "random" else None
+        s_arr, valid_s, ids_s, n_s = _pad_shard_set(jnp.asarray(s), M, sharding)
+    else:
+        n_s = n
 
     p = p or 2 * M
     p = int(np.ceil(p / M) * M)
@@ -523,6 +587,16 @@ def distributed_join(
     # ---- sampling phase -----------------------------------------------------
     stats_fn = make_stage_stats(mesh, axis, t_cells, backend)
     packets, confs, counts = jax.tree.map(np.asarray, stats_fn(data, valid))
+    if cross:
+        # S's shards are additional "local nodes": pool both sets' packets so
+        # the replicated Gibbs chain samples from the R∪S mixture.
+        pk_s, cf_s, ct_s = jax.tree.map(np.asarray, stats_fn(s_arr, valid_s))
+        packets = np.concatenate([packets, pk_s])
+        confs = np.concatenate([confs, cf_s])
+        counts = np.concatenate([counts, ct_s])
+        # All-padding shards (|S| < M, or empty S) carry no distribution.
+        keep = counts > 0
+        packets, confs, counts = packets[keep], confs[keep], counts[keep]
 
     k_gibbs, k_anchor = jax.random.split(key)
     accept_rate = 1.0
@@ -534,9 +608,17 @@ def distributed_join(
             k_gibbs, jnp.asarray(packets), jnp.asarray(confs), jnp.asarray(counts), k, length
         )
         accept_rate = float(acc)
+        if accept_rate <= 0.0:
+            warnings.warn(
+                "gibbs_from_packets accepted no draws (all node confidences "
+                "≈ 0); pivots fall back to raw chain draws", stacklevel=2,
+            )
     elif sampler == "random":
-        idx = jax.random.choice(k_gibbs, n, shape=(min(k, n),), replace=False)
-        pivots = jnp.asarray(data)[idx]
+        pool = np.concatenate([r_host, s_host]) if cross else r_host
+        idx = jax.random.choice(
+            k_gibbs, pool.shape[0], shape=(min(k, pool.shape[0]),), replace=False
+        )
+        pivots = jnp.asarray(pool)[idx]
     else:
         raise ValueError(f"distributed sampler must be generative|random, got {sampler!r}")
 
@@ -553,13 +635,20 @@ def distributed_join(
     )
 
     # ---- counting pass + capacity planning ----------------------------------
+    # V capacities always come from R's kernel counts; W capacities from the
+    # W-side set's whole counts (S when cross, R itself when self).
     counts_fn = make_stage_counts(mesh, axis, plan, backend)
     v_cnt, w_cnt, cell_lo, cell_hi = jax.tree.map(
         np.asarray, counts_fn(data, valid)
     )  # (M, p[, n])
+    if cross and not tighten:
+        # With tighten the S recount below supersedes this pass entirely.
+        _, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(s_arr, valid_s))
 
     if tighten:
         # H3-it1: whole box := delta-expanded MBB of the cell's members.
+        # Kernel-cell MBBs come from R (the V side) in both modes: Lemma 4
+        # puts every within-δ W partner inside the δ-expanded R MBB.
         glo = cell_lo.min(0)  # (p, n) across shards
         ghi = cell_hi.max(0)
         empty = glo > ghi  # no members anywhere
@@ -570,9 +659,13 @@ def distributed_join(
             whole_lo=jnp.asarray(glo - plan.delta, jnp.float32),
             whole_hi=jnp.asarray(ghi + plan.delta, jnp.float32),
         )
-        # W counts changed: one cheap recount against the tightened plan.
+        # W counts changed: one cheap recount against the tightened plan
+        # (kernel assignment — the V counts — is unaffected by whole boxes).
         counts_fn = make_stage_counts(mesh, axis, plan, backend)
-        v_cnt, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(data, valid))
+        if cross:
+            _, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(s_arr, valid_s))
+        else:
+            v_cnt, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(data, valid))
 
     exact_cap_v = max(int(v_cnt.max()), 1)
     exact_cap_w = max(int(w_cnt.max()), 1)
@@ -591,6 +684,15 @@ def distributed_join(
     v_est, w_est = cost_model.estimate_from_samples(
         np.asarray(piv_cells), np.asarray(piv_member), n
     )
+    if cross:
+        # The W side scales with |S|, not |R|. Caveat: the pivots approximate
+        # the POOLED R∪S mixture, so when the two distributions diverge this
+        # reported estimate is biased toward R's geography — only the
+        # exact-count cap_w below governs correctness; predicted_cap_w is the
+        # "single-pass provisioning" story metric.
+        _, w_est = cost_model.estimate_from_samples(
+            np.asarray(piv_cells), np.asarray(piv_member), n_s
+        )
     predicted_cap_w = cost_model.predict_capacity(w_est, M, slack=1.25)
 
     cap_v = int(np.ceil(exact_cap_v * capacity_slack))
@@ -598,8 +700,12 @@ def distributed_join(
 
     # ---- dispatch + verify ---------------------------------------------------
     vcfg = VerifyConfig(cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend)
-    verify_fn = make_stage_verify(mesh, axis, plan, vcfg)
-    out = verify_fn(data, valid, ids)
+    verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross)
+    out = (
+        verify_fn(data, valid, ids, s_arr, valid_s, ids_s)
+        if cross
+        else verify_fn(data, valid, ids)
+    )
 
     per_cell = np.asarray(out["per_cell_verified"]).reshape(-1)
     actual_v = int(v_cnt.sum())
@@ -615,7 +721,10 @@ def distributed_join(
         cell, vi, wi = np.nonzero(masks)
         gi = v_ids[cell, vi]
         gj = w_ids[cell, wi]
-        pr = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)], 1)
+        if cross:
+            pr = np.stack([gi, gj], 1)  # columns index different sets
+        else:
+            pr = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)], 1)
         pairs = np.unique(pr, axis=0).astype(np.int64) if pr.size else np.zeros((0, 2), np.int64)
 
     return DistJoinResult(
@@ -629,4 +738,5 @@ def distributed_join(
         node_confidences=confs,
         accept_rate=accept_rate,
         pairs=pairs,
+        duplication=float(actual_w / max(n_s, 1)),
     )

@@ -59,6 +59,17 @@ def select_anchors(
 
     method="fft"    — farthest-first traversal (greedy k-center, default)
     method="random" — uniform choice (the paper's A ⊂ S)
+
+    Duplicate pivots (common for generative pivots on near-discrete data)
+    cannot trap the traversal: while any unchosen row at positive distance
+    from the chosen set remains, argmax never lands on a zero-distance twin
+    of a chosen anchor. "Distinct" is counted in METRIC space, not by value:
+    rows at distance 0 under a pseudo-metric (e.g. scaled copies under
+    angular) collapse mapped dimensions just like value repeats do. Only
+    when fewer than n metric-distinct rows exist does the traversal run dry
+    — the residual anchors then fall back to method="random" fill over the
+    pivots (every leftover row is a zero-distance twin of a chosen anchor
+    anyway), instead of silently collapsing onto copies of row 0.
     """
     k = pivots.shape[0]
     if n > k:
@@ -70,6 +81,18 @@ def select_anchors(
         raise ValueError(f"unknown anchor method {method!r}")
 
     d = distances.pairwise(pivots, pivots, metric)  # (k, k)
+    # Metric-distinct count: a row is a twin if some earlier row sits at
+    # ~zero distance (value duplicates give exactly 0; pseudo-metric
+    # collisions give 0 up to fp noise — arccos is ill-conditioned near 1,
+    # hence the absolute tolerance). Zero-distance is transitive under the
+    # triangle inequality, so "no earlier twin" counts equivalence classes.
+    d_np = np.asarray(d)
+    twin = np.tril(d_np <= 1e-4, -1).any(1)
+    piv_np = np.asarray(pivots)
+    _, first, inv = np.unique(piv_np, axis=0, return_index=True, return_inverse=True)
+    twin |= first[inv] < np.arange(k)  # value repeats (exact, any metric)
+    n_distinct = int(k - twin.sum())
+    n_fft = min(n, n_distinct)
     first = jax.random.randint(key, (), 0, k)
 
     def body(carry, _):
@@ -81,8 +104,13 @@ def select_anchors(
         return (chosen_mask, min_dist), nxt
 
     mask0 = jnp.zeros((k,), bool).at[first].set(True)
-    (_, _), rest = jax.lax.scan(body, (mask0, d[first]), None, length=n - 1)
+    (_, _), rest = jax.lax.scan(body, (mask0, d[first]), None, length=n_fft - 1)
     idx = jnp.concatenate([first[None], rest])
+    if n_fft < n:
+        fill = jax.random.choice(
+            jax.random.fold_in(key, 1), k, shape=(n - n_fft,), replace=False
+        )
+        idx = jnp.concatenate([idx, fill])
     return SpaceMap(pivots[idx], metric)
 
 

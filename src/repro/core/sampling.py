@@ -47,10 +47,15 @@ def error_bound_probability(k: int, epsilon: float, m: int) -> float:
 
 
 def required_sample_size(epsilon: float, fail_prob: float, m: int) -> int:
-    """Smallest k with 2m·exp(−2kε²) ≤ fail_prob — the paper's §4.3 guideline
-    for choosing k from a tolerated error level (previous work had no such
-    guideline and could only blindly enlarge k)."""
-    return int(np.ceil(np.log(2.0 * m / fail_prob) / (2.0 * epsilon**2)))
+    """Smallest k ≥ 1 with 2m·exp(−2kε²) ≤ fail_prob — the paper's §4.3
+    guideline for choosing k from a tolerated error level (previous work had
+    no such guideline and could only blindly enlarge k).
+
+    When fail_prob ≥ 2m the bound is vacuous (it holds for every k), and the
+    raw inversion goes non-positive — clamp to the smallest meaningful sample
+    size, k = 1."""
+    k = int(np.ceil(np.log(2.0 * m / fail_prob) / (2.0 * epsilon**2)))
+    return max(k, 1)
 
 
 def sampling_error(samples: Array, reference: Array) -> Array:
@@ -81,15 +86,35 @@ def allocate_samples(n_i: np.ndarray, conf_i: np.ndarray, k: int) -> np.ndarray:
 
     Lower confidence ⇒ *more* samples from that node (the paper's intuition:
     we know less about it, so spend budget learning it).
+
+    Quotas are capped at the node population, k_i ≤ N_i: a node cannot
+    contribute more real objects than it holds, and an uncapped quota would
+    make the local sampler silently truncate (returning < k pivots overall).
+    Capped surplus is redistributed over the remaining nodes by the same
+    largest-remainder rule until k is placed (or every node is full, when
+    k > Σ N_i — the sampler then returns the whole population).
     """
-    weights = np.asarray(n_i, np.float64) / np.clip(np.asarray(conf_i, np.float64), 1e-6, None)
-    shares = k * weights / weights.sum()
-    base = np.floor(shares).astype(np.int64)
-    rem = k - int(base.sum())
-    if rem > 0:
-        order = np.argsort(-(shares - base))
-        base[order[:rem]] += 1
-    return base
+    pop = np.asarray(n_i, np.int64)
+    weights = np.asarray(n_i, np.float64) / np.clip(
+        np.asarray(conf_i, np.float64), 1e-6, None
+    )
+    alloc = np.zeros(pop.shape, np.int64)
+    k_left = int(min(k, pop.sum()))
+    while k_left > 0:
+        room = pop - alloc
+        w = np.where(room > 0, weights, 0.0)
+        if w.sum() <= 0:
+            break
+        shares = k_left * w / w.sum()
+        give = np.floor(shares).astype(np.int64)
+        rem = k_left - int(give.sum())
+        if rem > 0:
+            order = np.argsort(-(shares - give))
+            give[order[:rem]] += 1
+        give = np.minimum(give, room)
+        alloc += give
+        k_left -= int(give.sum())
+    return alloc
 
 
 # --------------------------------------------------------------------------
@@ -254,6 +279,23 @@ def _node_sample(model: GenerativeModel, key: jax.Array, e: Array) -> Array:
     return jax.lax.switch(fam_idx, [make_branch(f) for f in distinct], key)
 
 
+def _compact_accepted(xs: Array, accepted: Array, k: int) -> tuple[Array, Array]:
+    """Compact the first k accepted chain draws (stable order).
+
+    Shortfall tail slots repeat the FIRST ACCEPTED row (``order[0]`` is
+    accepted whenever anything was). If the chain accepted nothing at all,
+    no accepted row exists to repeat — instead of degenerating to k copies
+    of one rejected draw, fall back to the first k raw chain draws (still
+    mixture-distributed and diverse); the returned 0.0 acceptance rate is
+    the caller's telemetry to warn on.
+    """
+    order = jnp.argsort(~accepted, stable=True)
+    take = order[:k]
+    take = jnp.where(accepted[take], take, take[0])
+    take = jnp.where(accepted.sum() > 0, take, jnp.arange(k))
+    return xs[take], accepted.mean()
+
+
 def gibbs_chain(
     key: jax.Array,
     model: GenerativeModel,
@@ -280,7 +322,11 @@ def gibbs_chain(
     L = ceil(k / c_min · oversample) so that k acceptances occur with
     overwhelming probability; accepted draws are compacted with a stable
     argsort and, in the (measure-zero in practice) case of a shortfall, the
-    tail repeats earlier accepted rows — never rejected ones.
+    tail repeats the first accepted row — never rejected ones. If the chain
+    accepts NOTHING (all-confidence-≈0 shards), there is no accepted row to
+    repeat; the first k raw chain draws are returned instead (still drawn
+    from the node mixture, and diverse — not k copies of one rejected draw)
+    and the 0.0 acceptance rate is the caller's cue to warn.
     """
     counts = model.counts.astype(jnp.float32)
     conf = jnp.clip(model.confidence.astype(jnp.float32), 1e-6, 1.0)
@@ -303,14 +349,7 @@ def gibbs_chain(
         return c, (x, c)
 
     _, (xs, cs) = jax.lax.scan(step, jnp.int32(1), jax.random.split(key, length))
-    accepted = cs == 1
-    # Stable compaction: accepted rows first, original order preserved.
-    order = jnp.argsort(~accepted, stable=True)
-    take = order[:k]
-    # Shortfall guard: map any non-accepted tail position onto position 0.
-    ok = accepted[take]
-    take = jnp.where(ok, take, take[0])
-    return xs[take], accepted.mean()
+    return _compact_accepted(xs, cs == 1, k)
 
 
 def generative_sample(

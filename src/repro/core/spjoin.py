@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -62,7 +63,8 @@ class JoinConfig:
 
 @dataclasses.dataclass
 class JoinResult:
-    pairs: np.ndarray  # (n_pairs, 2) int64, i < j, unique
+    pairs: np.ndarray  # (n_pairs, 2) int64, unique; self-join: i < j both
+    #   indexing data — R×S: column 0 indexes R, column 1 indexes S
     n_verifications: int  # Σ_h |V_h|·|W_h| actually computed
     cost: cost_model.PartitionCost
     node_confidences: np.ndarray
@@ -116,7 +118,12 @@ def draw_pivots(
             return sampling.distribution_aware_sample(
                 key, list(shards), node_stats, cfg.k
             )
-        pivots, _ = sampling.generative_sample(key, node_stats, cfg.k)
+        pivots, acc = sampling.generative_sample(key, node_stats, cfg.k)
+        if float(acc) <= 0.0:
+            warnings.warn(
+                "gibbs chain accepted no draws (all node confidences ≈ 0); "
+                "pivots fall back to raw chain draws", stacklevel=2,
+            )
         return pivots
     raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
@@ -139,31 +146,62 @@ def build_plan(
     return plan, smap
 
 
+def _as_shards(x: Array | Sequence[Array], n_nodes: int) -> list[Array]:
+    if isinstance(x, (list, tuple)):
+        return [jnp.asarray(v) for v in x]
+    x = jnp.asarray(x)
+    if x.shape[0] == 0:
+        return []
+    return list(jnp.array_split(x, n_nodes))
+
+
 def join(
     data: Array | Sequence[Array],
     cfg: JoinConfig,
     return_pairs: bool = True,
     n_nodes: int = 4,
+    *,
+    s: Array | Sequence[Array] | None = None,
 ) -> JoinResult:
-    """Self-join: all pairs with D(o_i, o_j) ≤ δ.
+    """Metric similarity join.
 
-    ``data``: either the full (N, m) array (split into ``n_nodes`` simulated
-    local nodes) or an explicit list of per-node shards.
+    Self-join (``s=None``): all pairs (i, j), i < j, with D(o_i, o_j) ≤ δ.
+
+    Two-set R×S join (``s`` given): all pairs (i ∈ R, j ∈ S) with
+    D(r_i, s_j) ≤ δ — ``data`` is R, ``s`` is S. Node stats are fitted on the
+    union of R and S shards so pivots cover both distributions (Alg. 1 over
+    every local node); V-side rows come from R's kernel cells, W-side rows
+    from S's whole membership, and each cross pair is emitted exactly once
+    (in R's kernel cell). Passing the same object as both ``data`` and ``s``
+    (R = S aliasing) is detected and routed through the self-join path.
+
+    ``data`` / ``s``: either the full (N, m) array (split into ``n_nodes``
+    simulated local nodes) or an explicit list of per-node shards.
     """
+    if s is data:
+        s = None  # R = S aliasing: the canonical semantics is the self-join
+    cross = s is not None
     key = jax.random.PRNGKey(cfg.seed)
-    if isinstance(data, (list, tuple)):
-        shards = [jnp.asarray(s) for s in data]
-    else:
-        data = jnp.asarray(data)
-        shards = list(jnp.array_split(data, n_nodes))
-    allx = jnp.concatenate(shards, axis=0)
-    n_total = allx.shape[0]
+    shards = _as_shards(data, n_nodes)
+    allx = jnp.concatenate(shards, axis=0) if shards else jnp.asarray(data)
+
+    s_shards: list[Array] = _as_shards(s, n_nodes) if cross else []
+    s_all = (
+        jnp.concatenate(s_shards, axis=0)
+        if s_shards
+        else jnp.zeros((0, allx.shape[1]), allx.dtype)
+    )
 
     # ---- sampling phase -------------------------------------------------
     t0 = time.perf_counter()
     k_sample, k_anchor = jax.random.split(key)
-    node_stats = fit_node_stats(shards, cfg.t_cells)
-    pivots = draw_pivots(k_sample, shards, node_stats, cfg)
+    # R∪S: pivots must cover both distributions (empty-set shards carry no
+    # distribution and are skipped — the self path keeps its exact shard list).
+    fit_shards = (
+        [sh for sh in shards + s_shards if sh.shape[0] > 0] if cross else shards
+    )
+    node_stats = fit_node_stats(fit_shards, cfg.t_cells)
+    pivots = draw_pivots(k_sample, fit_shards, node_stats, cfg)
     t_sample = time.perf_counter() - t0
 
     # ---- map phase -------------------------------------------------------
@@ -172,8 +210,17 @@ def join(
     x_mapped = smap(allx)
     cells = partition.assign_kernel(plan, x_mapped)
     if cfg.tighten:
+        # Kernel-cell MBBs come from R only (V rows); Lemma 4 still covers
+        # every S partner: it lies within L∞ δ of an R member of the cell.
         plan = partition.tighten(plan, x_mapped, cells)
-    member = partition.whole_membership(plan, x_mapped)
+    if cross:
+        member = (
+            partition.whole_membership(plan, smap(s_all))
+            if s_all.shape[0]
+            else jnp.zeros((0, plan.p), bool)
+        )
+    else:
+        member = partition.whole_membership(plan, x_mapped)
     t_map = time.perf_counter() - t0
 
     # ---- reduce phase: streaming tiled verify engine ---------------------
@@ -184,14 +231,21 @@ def join(
     pairs, vstats = verify_lib.verify_pairs(
         allx, cells_np, member_np, cfg.delta, cfg.metric,
         config=cfg.engine_config(), return_pairs=return_pairs,
+        data_w=s_all if cross else None,
     )
     t_verify = time.perf_counter() - t0
 
+    if cross:
+        cost = cost_model.rs_partition_cost(
+            stats["v_sizes"], stats["w_sizes"], int(s_all.shape[0])
+        )
+    else:
+        cost = cost_model.partition_cost(stats["v_sizes"], stats["w_sizes"])
     return JoinResult(
         pairs=pairs,
         n_verifications=vstats.n_verifications,
-        cost=cost_model.partition_cost(stats["v_sizes"], stats["w_sizes"]),
-        node_confidences=np.array([s.confidence for s in node_stats]),
+        cost=cost,
+        node_confidences=np.array([st.confidence for st in node_stats]),
         sample_time_s=t_sample,
         map_time_s=t_map,
         verify_time_s=t_verify,
@@ -199,8 +253,20 @@ def join(
     )
 
 
-def brute_force_pairs(data: Array, delta: float, metric: str = "l1") -> np.ndarray:
-    """Ground-truth pair list for tests (quadratic; small inputs only)."""
-    mask = np.asarray(distances.brute_force_join(jnp.asarray(data), delta, metric))
+def brute_force_pairs(
+    data: Array, delta: float, metric: str = "l1", s: Array | None = None
+) -> np.ndarray:
+    """Ground-truth pair list for tests (quadratic; small inputs only).
+
+    ``s=None``: self-join pairs (i, j), i < j. With ``s``: cross R×S pairs,
+    column 0 indexing ``data`` (R), column 1 indexing ``s`` (S)."""
+    if s is None:
+        mask = np.asarray(distances.brute_force_join(jnp.asarray(data), delta, metric))
+    else:
+        mask = np.asarray(
+            distances.brute_force_join(
+                jnp.asarray(data), jnp.asarray(s), delta, metric
+            )
+        )
     i, j = np.nonzero(mask)
     return np.stack([i, j], axis=1).astype(np.int64)

@@ -31,6 +31,13 @@ De-dup rule (same statement as the seed executor): a hit (i, j) with
 cell(i) = g, cell(j) = h is emitted by cell min(g, h) only; within one cell
 both orders are present so we keep id_i < id_j. Lemma 4 guarantees each
 qualifying pair is seen by both cells, hence exactly once after the rule.
+
+Two-set R×S mode (``cross=True`` / ``data_w`` given): V rows come from R's
+kernel cells, W rows from S's whole membership. Each R row lives in exactly
+one kernel cell and Lemma 4 puts every δ-neighbour s ∈ S inside that cell's
+whole box, so "emit in R's kernel cell only" already yields each cross pair
+exactly once — the min-cell + id ordering rule degenerates to plain padding
+validity, and emitted pairs are (i ∈ R, j ∈ S), never reordered.
 """
 from __future__ import annotations
 
@@ -98,13 +105,22 @@ def pair_validity(vids: Array, wids: Array) -> Array:
     return (vids[:, None] >= 0) & (wids[None, :] >= 0)
 
 
-def apply_dedup(hits: Array, vids: Array, wids: Array, wcells: Array, cell_id) -> Array:
+def apply_dedup(
+    hits: Array, vids: Array, wids: Array, wcells: Array, cell_id, cross: bool = False
+) -> Array:
     """Mask a raw hit matrix down to pairs this cell should emit.
 
-    ``wcells`` is the *kernel* cell of each W row; ``cell_id`` the cell being
-    verified (V rows' own cell). Min-cell rule: emit iff the W row's cell is
-    greater than this cell, or equal with id_v < id_w.
+    Self-join (``cross=False``): ``wcells`` is the *kernel* cell of each W
+    row; ``cell_id`` the cell being verified (V rows' own cell). Min-cell
+    rule: emit iff the W row's cell is greater than this cell, or equal with
+    id_v < id_w.
+
+    R×S (``cross=True``): V and W rows index different sets, so no symmetric
+    duplicate exists — every valid hit is emitted (each R row has exactly one
+    kernel cell, hence each cross pair is verified exactly once).
     """
+    if cross:
+        return hits & pair_validity(vids, wids)
     emit = (wcells[None, :] > cell_id) | (
         (wcells[None, :] == cell_id) & (vids[:, None] < wids[None, :])
     )
@@ -122,12 +138,14 @@ def verify_tile(
     delta: float,
     metric: str,
     backend: str,
+    cross: bool = False,
 ) -> Array:
     """One tile's fused verify: distances, threshold, validity, de-dup.
 
     jit-safe; the streaming engine wraps it in its own jit, the distributed
     stage calls it inside shard_map. ``backend`` must already be concrete
     ("numpy" | "pallas" — resolve with :func:`resolve_engine_backend`).
+    ``cross=True`` switches to R×S semantics (validity only, no min-cell).
     """
     if backend == "pallas":
         hits = kops.pairdist_mask(xv, xw, delta, metric, use_kernel=True)
@@ -136,7 +154,7 @@ def verify_tile(
     else:
         # Metrics only the reference module knows (angular, jaccard_minhash).
         hits = distances.pairwise(xv, xw, metric) <= delta
-    return apply_dedup(hits, vids, wids, wcells, cell_id)
+    return apply_dedup(hits, vids, wids, wcells, cell_id, cross=cross)
 
 
 def resolve_engine_backend(backend: str, metric: str) -> str:
@@ -148,7 +166,7 @@ def resolve_engine_backend(backend: str, metric: str) -> str:
 
 
 _tile_verify = jax.jit(
-    verify_tile, static_argnames=("delta", "metric", "backend")
+    verify_tile, static_argnames=("delta", "metric", "backend", "cross")
 )
 
 
@@ -200,15 +218,23 @@ def verify_cell_lists(
     *,
     config: EngineConfig = EngineConfig(),
     return_pairs: bool = True,
+    data_w: Array | np.ndarray | None = None,
 ) -> tuple[np.ndarray, VerifyStats]:
     """Run the full reduce phase over explicit per-cell index sets.
 
     ``data``: (N, m) objects; ``cells_of``: (N,) kernel cell per object;
     ``v_lists[h]`` / ``w_lists[h]``: global row indices of V_h / W_h.
     Returns (pairs, stats) with pairs (n_pairs, 2) int64, i < j, unique.
+
+    Two-set mode: when ``data_w`` is given, ``w_lists`` index into ``data_w``
+    (the S side) while ``v_lists``/``cells_of`` index ``data`` (the R side);
+    pairs come back as (i ∈ R, j ∈ S) — not reordered, unique by
+    construction (each R row sits in exactly one kernel cell).
     """
     data_np = np.asarray(data, np.float32)
     cells_np = np.asarray(cells_of)
+    cross = data_w is not None
+    data_w_np = np.asarray(data_w, np.float32) if cross else data_np
     backend = resolve_engine_backend(config.backend, metric)
     stats = VerifyStats()
     chunks: list[np.ndarray] = []
@@ -227,9 +253,10 @@ def verify_cell_lists(
         for w0 in range(0, w_idx.size, config.tile_w):
             wt = w_idx[w0 : w0 + config.tile_w]
             cap_w = bucket_size(wt.size, config.tile_w, config.min_bucket)
-            xw, wids = _pad_gather(data_np, wt, cap_w)
+            xw, wids = _pad_gather(data_w_np, wt, cap_w)
             wc = np.full((cap_w,), -1, np.int64)
-            wc[: wt.size] = cells_np[wt]
+            if not cross:  # W kernel cells only exist / matter for self-join
+                wc[: wt.size] = cells_np[wt]
             w_tiles.append((wt, cap_w, xw, wids, wc))
         for v0 in range(0, v_idx.size, config.tile_v):
             vt = v_idx[v0 : v0 + config.tile_v]
@@ -243,6 +270,7 @@ def verify_cell_lists(
                     _tile_verify(
                         xv, xw, vids, wids, wc, h,
                         delta=float(delta), metric=metric, backend=backend,
+                        cross=cross,
                     )
                 )
                 if not mask.any():
@@ -253,9 +281,13 @@ def verify_cell_lists(
                     chunks.append(np.stack([vt[vi], wt[wi]], axis=1))
 
     if chunks:
-        # The min-cell rule emits each pair once; sort+unique is kept as a
-        # cheap invariant (O(hits log hits)) matching the seed executor.
-        pairs = np.unique(np.sort(np.concatenate(chunks), axis=1), axis=0)
+        # Each pair is emitted once (min-cell rule / unique kernel cell);
+        # sort+unique is kept as a cheap invariant matching the seed
+        # executor. Cross pairs index different sets, so no column sort.
+        pairs = np.concatenate(chunks)
+        if not cross:
+            pairs = np.sort(pairs, axis=1)
+        pairs = np.unique(pairs, axis=0)
     else:
         pairs = np.zeros((0, 2), np.int64)
     return pairs.astype(np.int64), stats
@@ -270,10 +302,17 @@ def verify_pairs(
     *,
     config: EngineConfig = EngineConfig(),
     return_pairs: bool = True,
+    data_w: Array | np.ndarray | None = None,
 ) -> tuple[np.ndarray, VerifyStats]:
     """Reduce phase from a kernel-cell assignment + whole-membership matrix.
 
-    ``cells``: (N,) int cell id; ``member``: (N, p) bool whole membership.
+    Self-join: ``cells``: (N,) int cell id of ``data``; ``member``: (N, p)
+    bool whole membership of the same rows.
+
+    R×S: ``data``/``cells`` describe R (the V side); ``data_w`` is S and
+    ``member`` is then S's whole membership (|S|, p) — V_h comes from R's
+    kernel cells, W_h from S's whole membership.
+
     Derives the per-cell index sets and streams them through
     :func:`verify_cell_lists`.
     """
@@ -286,7 +325,7 @@ def verify_pairs(
     w_lists = [np.flatnonzero(member_np[:, h]) for h in range(p)]
     return verify_cell_lists(
         data, cells_np, v_lists, w_lists, delta, metric,
-        config=config, return_pairs=return_pairs,
+        config=config, return_pairs=return_pairs, data_w=data_w,
     )
 
 

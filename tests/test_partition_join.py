@@ -48,6 +48,32 @@ def test_iterative_balances_kernel_sizes(rng):
     assert sizes.max() <= 2 * sizes.min() + 8, sizes  # equi-depth splits
 
 
+def test_fft_anchors_distinct_under_duplicate_pivots(rng):
+    """Duplicate pivots (generative pivots on near-discrete data) must not
+    collapse target-space dimensions: with enough distinct values the FFT
+    anchors are all distinct; with fewer than n the distinct set is exhausted
+    first and the residual falls back to random fill (no crash, no row-0
+    collapse)."""
+    base = rng.normal(size=(4, 3)).astype(np.float32)
+    pivots = jnp.asarray(np.repeat(base, 8, axis=0))  # 32 rows, 4 distinct
+    smap = mapping.select_anchors(jax.random.PRNGKey(0), pivots, 4, "l1")
+    assert np.unique(np.asarray(smap.anchors), axis=0).shape[0] == 4
+    smap6 = mapping.select_anchors(jax.random.PRNGKey(0), pivots, 6, "l1")
+    a6 = np.asarray(smap6.anchors)
+    assert a6.shape == (6, 3)
+    assert np.unique(a6, axis=0).shape[0] == 4  # every distinct value chosen
+
+
+def test_fft_anchors_pseudo_metric_zero_distance_twins(rng):
+    """Scaled copies are value-distinct but angular-distance 0: the distinct
+    count must be metric-aware, so the residual falls back to random fill
+    instead of silently collapsing every mapped dimension."""
+    v = rng.normal(size=(1, 3)).astype(np.float32)
+    pivots = jnp.asarray(np.concatenate([v * c for c in (1.0, 2.0, 3.0, 4.0)]))
+    smap = mapping.select_anchors(jax.random.PRNGKey(0), pivots, 3, "angular")
+    assert np.asarray(smap.anchors).shape == (3, 3)  # no crash, full shape
+
+
 def test_mapping_is_lipschitz(rng):
     """|o^n_x[i] - o^n_y[i]| <= D(x, y) — the Lemma 4 precondition."""
     x = jnp.asarray(rng.normal(size=(50, 6)), jnp.float32)

@@ -1,0 +1,271 @@
+"""Two-set R×S join parity suite (ISSUE 2): both executors vs the
+brute-force cross oracle across metrics and asymmetric sizes, plus the
+degenerate shapes (empty S, R = S aliasing) and the R×S cost model.
+
+The 8-device distributed sweep lives in test_distributed.py conventions
+(subprocess, slow tier); here a 1-device mesh keeps the distributed cross
+path in the fast tier — same stages, same all_to_all code.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model, distances, spjoin, verify
+from repro.data import synthetic
+
+
+def _rs_dataset(metric, rng, n_r=80, n_s=200):
+    if metric == "jaccard_minhash":
+        r = rng.integers(0, 20, size=(n_r, 32)).astype(np.float32)
+        s = rng.integers(0, 20, size=(n_s, 32)).astype(np.float32)
+        return r, s, 0.55
+    r = np.concatenate(
+        [rng.normal(loc=c, scale=1.0, size=(n_r // 2, 5)) for c in (0.0, 4.0)]
+    ).astype(np.float32)
+    s = np.concatenate(
+        [rng.normal(loc=c, scale=1.0, size=(n_s // 4, 5)) for c in (1.0, 4.0, 8.0, 12.0)]
+    ).astype(np.float32)
+    d = np.asarray(distances.pairwise(jnp.asarray(r), jnp.asarray(s), metric))
+    delta = float(np.quantile(d, 0.03))
+    return r, s, delta
+
+
+# ---------------------------------------------------------------------------
+# The oracle itself (overloaded call forms)
+# ---------------------------------------------------------------------------
+
+
+def test_brute_force_join_overloads(rng):
+    x = jnp.asarray(rng.normal(size=(30, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(50, 4)), jnp.float32)
+    self_mask = np.asarray(distances.brute_force_join(x, 1.5, "l2"))
+    assert self_mask.shape == (30, 30)
+    assert not np.tril(self_mask).any()  # i < j only
+    cross = np.asarray(distances.brute_force_join(x, y, 1.5, "l2"))
+    assert cross.shape == (30, 50)
+    d = np.asarray(distances.pairwise(x, y, "l2"))
+    assert np.array_equal(cross, d <= 1.5)
+    # keyword forms
+    assert np.array_equal(
+        np.asarray(distances.brute_force_join(x, s=y, delta=1.5, metric="l2")), cross
+    )
+    # empty sides
+    empty = jnp.zeros((0, 4), jnp.float32)
+    assert np.asarray(distances.brute_force_join(x, empty, 1.5)).shape == (30, 0)
+    with pytest.raises(TypeError):
+        distances.brute_force_join(x)
+    with pytest.raises(TypeError):  # positional + keyword double assignment
+        distances.brute_force_join(x, 1.5, delta=2.0)
+    with pytest.raises(TypeError):
+        distances.brute_force_join(x, y, 1.5, "l2", metric="l1")
+
+
+def test_brute_force_pairs_cross_columns(rng):
+    r = rng.normal(size=(10, 3)).astype(np.float32)
+    s = rng.normal(size=(25, 3)).astype(np.float32)
+    pairs = spjoin.brute_force_pairs(r, 2.0, "l1", s=s)
+    assert pairs.shape[1] == 2
+    assert (pairs[:, 0] < 10).all() and (pairs[:, 1] < 25).all()
+
+
+# ---------------------------------------------------------------------------
+# Reference executor parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "linf", "angular"])
+def test_spjoin_rs_parity(metric, rng):
+    """Acceptance criterion: R×S results exact for ≥2 metrics, |R| != |S|."""
+    r, s, delta = _rs_dataset(metric, rng)
+    cfg = spjoin.JoinConfig(delta=delta, metric=metric, k=64, p=6, n_dims=3, seed=0)
+    res = spjoin.join(r, cfg, s=s)
+    truth = spjoin.brute_force_pairs(r, delta, metric, s=s)
+    assert np.array_equal(res.pairs, truth), (metric, res.pairs.shape, truth.shape)
+    # cost model ran the R×S instantiation: no same-set (inner) term
+    assert res.cost.inner == 0.0
+    assert res.cost.duplication >= 0.0
+
+
+@pytest.mark.parametrize("sampler", ["random", "distribution", "generative"])
+def test_spjoin_rs_parity_all_samplers(sampler, rng):
+    r, s, delta = _rs_dataset("l1", rng, n_r=60, n_s=160)
+    cfg = spjoin.JoinConfig(
+        delta=delta, metric="l1", sampler=sampler, k=48, p=4, n_dims=3, seed=1
+    )
+    res = spjoin.join(r, cfg, s=s)
+    truth = spjoin.brute_force_pairs(r, delta, "l1", s=s)
+    assert np.array_equal(res.pairs, truth), sampler
+
+
+def test_spjoin_rs_shifted_distributions(rng):
+    """The generator the benchmark uses: R and S have genuinely different
+    per-node distributions; pooled R∪S pivots must still give an exact join."""
+    r, s = synthetic.rs_mixture(90, 350, 6, n_clusters=3, shift=4.0, seed=2)
+    cfg = spjoin.JoinConfig(delta=3.0, metric="l1", k=96, p=8, n_dims=4, seed=0)
+    res = spjoin.join(r, cfg, s=s)
+    truth = spjoin.brute_force_pairs(r, 3.0, "l1", s=s)
+    assert np.array_equal(res.pairs, truth)
+
+
+def test_spjoin_empty_s(rng):
+    r = rng.normal(size=(50, 4)).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=2.0, metric="l1", k=32, p=4, n_dims=3)
+    res = spjoin.join(r, cfg, s=np.zeros((0, 4), np.float32))
+    assert res.pairs.shape == (0, 2)
+    assert res.n_verifications == 0
+
+
+def test_spjoin_aliasing_reproduces_self_join(rng):
+    """R = S aliasing must reproduce today's self-join pairs exactly."""
+    data = rng.normal(size=(120, 4)).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=1.5, metric="l2", k=48, p=6, n_dims=3, seed=0)
+    self_res = spjoin.join(data, cfg)
+    alias_res = spjoin.join(data, cfg, s=data)
+    assert np.array_equal(self_res.pairs, alias_res.pairs)
+    assert np.array_equal(self_res.pairs, spjoin.brute_force_pairs(data, 1.5, "l2"))
+
+
+# ---------------------------------------------------------------------------
+# Distributed executor parity (1-device mesh: fast tier; 8-device is slow)
+# ---------------------------------------------------------------------------
+
+
+def _dist_join(r, s, delta, metric, **kw):
+    from repro.core import distributed
+
+    mesh = jax.make_mesh((1,), ("data",))
+    return distributed.distributed_join(
+        jnp.asarray(r), s=None if s is None else jnp.asarray(s), mesh=mesh,
+        delta=delta, metric=metric, k=48, p=4, n_dims=3,
+        emit_pairs=True, seed=0, **kw,
+    )
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2"])
+def test_distributed_rs_parity(metric, rng):
+    r, s, delta = _rs_dataset(metric, rng, n_r=60, n_s=150)
+    res = _dist_join(r, s, delta, metric)
+    truth = spjoin.brute_force_pairs(r, delta, metric, s=s)
+    assert np.array_equal(res.pairs, truth), (metric, res.pairs.shape, truth.shape)
+    assert res.overflow == 0
+    assert res.duplication >= 0.0
+
+
+def test_distributed_rs_empty_s(rng):
+    r = rng.normal(size=(40, 4)).astype(np.float32)
+    res = _dist_join(r, np.zeros((0, 4), np.float32), 2.0, "l1")
+    assert res.pairs.shape == (0, 2)
+    assert res.n_hits == 0
+
+
+def test_distributed_rs_aliasing_matches_self(rng):
+    data = rng.normal(size=(90, 4)).astype(np.float32)
+    x = jnp.asarray(data)
+    from repro.core import distributed
+
+    mesh = jax.make_mesh((1,), ("data",))
+    kw = dict(mesh=mesh, delta=1.5, metric="l2", k=48, p=4, n_dims=3,
+              emit_pairs=True, seed=0)
+    self_res = distributed.distributed_join(x, **kw)
+    alias_res = distributed.distributed_join(x, s=x, **kw)
+    assert np.array_equal(self_res.pairs, alias_res.pairs)
+    assert np.array_equal(self_res.pairs, spjoin.brute_force_pairs(data, 1.5, "l2"))
+
+
+@pytest.mark.slow
+def test_distributed_rs_parity_8dev():
+    """Multi-device cross join: subprocess with 8 simulated CPU devices."""
+    import json
+    import subprocess
+    import sys
+    import textwrap
+
+    prog = (
+        "import os\n"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n"
+        + textwrap.dedent("""
+        import json, numpy as np, jax, jax.numpy as jnp
+        mesh = jax.make_mesh((8,), ("data",))
+        from repro.core import distributed, spjoin
+        from repro.data import synthetic
+        out = {}
+        for metric, delta in (("l1", 4.0), ("l2", 2.0)):
+            r, s = synthetic.rs_mixture(120, 520, 6, n_clusters=4, shift=3.0, seed=5)
+            res = distributed.distributed_join(
+                jnp.asarray(r), s=jnp.asarray(s), mesh=mesh, delta=delta,
+                metric=metric, k=192, p=16, n_dims=4, emit_pairs=True, seed=0)
+            truth = spjoin.brute_force_pairs(r, delta, metric, s=s)
+            out[metric] = dict(exact=bool(np.array_equal(res.pairs, truth)),
+                               pairs=int(res.pairs.shape[0]),
+                               overflow=int(res.overflow))
+        print(json.dumps(out))
+        """)
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.splitlines()[-1])
+    for metric, row in res.items():
+        assert row["exact"], (metric, row)
+        assert row["overflow"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level cross mode + R×S cost model
+# ---------------------------------------------------------------------------
+
+
+def test_verify_pairs_cross_full_membership(rng):
+    """With all-cells membership the cross engine must equal the raw oracle."""
+    r = rng.normal(size=(40, 4)).astype(np.float32)
+    s = rng.normal(size=(70, 4)).astype(np.float32)
+    cells = rng.integers(0, 3, size=40)
+    member = np.ones((70, 3), bool)
+    pairs, stats = verify.verify_pairs(r, cells, member, 2.0, "l1", data_w=s)
+    mask = np.asarray(distances.brute_force_join(jnp.asarray(r), jnp.asarray(s), 2.0))
+    want = np.stack(np.nonzero(mask), axis=1)
+    assert np.array_equal(pairs, want)
+    # V cells partition R: Σ_h |V_h|·|W_h| = |R|·|S| with full membership
+    assert stats.n_verifications == 40 * 70
+
+
+def test_verify_cross_tile_invariance(rng):
+    r = rng.normal(size=(60, 4)).astype(np.float32)
+    s = rng.normal(size=(90, 4)).astype(np.float32)
+    cells = rng.integers(0, 4, size=60)
+    member = rng.random((90, 4)) < 0.7
+    base, _ = verify.verify_pairs(
+        r, cells, member, 1.8, "l1", data_w=s,
+        config=verify.EngineConfig(backend="numpy", tile_v=1024, tile_w=4096),
+    )
+    tiled, _ = verify.verify_pairs(
+        r, cells, member, 1.8, "l1", data_w=s,
+        config=verify.EngineConfig(backend="numpy", tile_v=8, tile_w=16),
+    )
+    assert np.array_equal(base, tiled)
+
+
+def test_rs_partition_cost():
+    v = np.array([3, 0, 5])
+    w = np.array([10, 4, 2])
+    c = cost_model.rs_partition_cost(v, w, n_s=16)
+    assert c.inner == 0.0
+    assert c.total == c.outer == 3 * 10 + 0 + 5 * 2
+    assert c.max_cell == 30
+    assert c.duplication == pytest.approx(16 / 16)
+
+
+def test_rs_mixture_generator_shapes():
+    r, s = synthetic.rs_mixture(50, 200, 7, seed=0)
+    assert r.shape == (50, 7) and s.shape == (200, 7)
+    assert r.dtype == np.float32 and s.dtype == np.float32
+    r2, s2 = synthetic.rs_mixture(50, 200, 7, seed=0)
+    assert np.array_equal(r, r2) and np.array_equal(s, s2)
+    # shifted second set: the per-set means genuinely differ
+    assert np.abs(r.mean(0) - s.mean(0)).max() > 0.5

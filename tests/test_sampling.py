@@ -43,6 +43,51 @@ def test_allocation_favors_low_confidence():
     assert alloc[0] > alloc[1]
 
 
+def test_allocation_caps_at_population_and_redistributes():
+    """A tiny low-confidence node's Eq. 11 quota would exceed its population;
+    the cap must bind and the surplus flow to nodes with room."""
+    ns = np.array([10, 1000, 1000])
+    cs = np.array([0.001, 0.9, 0.9])  # raw Eq. 11 sends ~90% of k to node 0
+    alloc = sampling.allocate_samples(ns, cs, 500)
+    assert (alloc <= ns).all()
+    assert alloc.sum() == 500
+    assert alloc[0] == 10  # capped at population
+
+
+def test_allocation_k_exceeding_total_population():
+    ns = np.array([5, 7])
+    alloc = sampling.allocate_samples(ns, np.array([0.5, 0.5]), 100)
+    assert np.array_equal(alloc, ns)  # whole population, no phantom quota
+
+
+@given(
+    st.lists(st.integers(1, 50), min_size=2, max_size=6),
+    st.lists(st.floats(0.001, 1.0), min_size=2, max_size=6),
+    st.integers(1, 400),
+)
+@settings(max_examples=50, deadline=None)
+def test_allocation_capped_invariants(ns, cs, k):
+    n = min(len(ns), len(cs))
+    pop = np.array(ns[:n])
+    alloc = sampling.allocate_samples(pop, np.array(cs[:n]), k)
+    assert (alloc >= 0).all() and (alloc <= pop).all()
+    assert alloc.sum() == min(k, pop.sum())
+
+
+def test_distribution_aware_exact_k_when_quota_exceeds_population(rng):
+    """Acceptance criterion: exactly k pivots even when a node's quota
+    exceeds its population (pre-fix: silent truncation to < k)."""
+    shards, stats = _node_stats(rng, n_nodes=3, n=800)
+    tiny = jnp.asarray(rng.normal(8.0, 0.5, size=(12, 3)), jnp.float32)
+    params, res = gof.fit_best_family(tiny)
+    shards.append(tiny)
+    stats.append(sampling.NodeStats(params.family, params, 0.001, 12))
+    out = sampling.distribution_aware_sample(
+        jax.random.PRNGKey(0), shards, stats, k=600
+    )
+    assert out.shape == (600, 3)
+
+
 # ---------------------------------------------------------------------------
 # Theorem 3 error bound
 # ---------------------------------------------------------------------------
@@ -53,6 +98,28 @@ def test_required_sample_size_inverts_bound():
         k = sampling.required_sample_size(eps, dp, m)
         assert sampling.error_bound_probability(k, eps, m) <= dp
         assert sampling.error_bound_probability(k - 1, eps, m) > dp
+
+
+def test_required_sample_size_clamps_vacuous_bound():
+    """fail_prob ≥ 2m makes the bound vacuous; the raw inversion went ≤ 0."""
+    assert sampling.required_sample_size(0.1, 2 * 8, 8) == 1
+    assert sampling.required_sample_size(0.1, 100.0, 8) == 1
+    assert sampling.required_sample_size(0.5, 16.0001, 8) == 1
+
+
+@given(
+    eps=st.floats(0.01, 0.5),
+    dp=st.floats(0.001, 50.0),
+    m=st.integers(1, 256),
+)
+@settings(max_examples=80, deadline=None)
+def test_required_sample_size_forward_bound_property(eps, dp, m):
+    """The forward bound must hold at the returned k across the whole grid,
+    including the vacuous region fail_prob ≥ 2m."""
+    k = sampling.required_sample_size(eps, dp, m)
+    assert k >= 1
+    # fp-tolerant: ceil() makes k exact up to exp/log rounding at the boundary
+    assert sampling.error_bound_probability(k, eps, m) <= dp * (1 + 1e-9)
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
@@ -143,6 +210,26 @@ def test_generative_tracks_global_distribution_high_confidence(rng):
     err = float(sampling.sampling_error(s, allx))
     assert err < 0.1, err
     assert float(acc) > 0.9
+
+
+def test_compact_accepted_zero_accept_falls_back_to_raw_draws():
+    """All-rejected chain (all-confidence-≈0 shards): the old guard returned
+    k copies of a REJECTED draw; now the raw chain draws come back, diverse,
+    with 0.0 acceptance telemetry for the caller to warn on."""
+    xs = jnp.arange(20, dtype=jnp.float32)[:, None]
+    out, acc = sampling._compact_accepted(xs, jnp.zeros(20, bool), 5)
+    assert float(acc) == 0.0
+    assert np.array_equal(np.asarray(out)[:, 0], np.arange(5))
+
+
+def test_compact_accepted_shortfall_repeats_first_accepted():
+    xs = jnp.arange(20, dtype=jnp.float32)[:, None]
+    accepted = jnp.zeros(20, bool).at[7].set(True).at[11].set(True)
+    out, acc = sampling._compact_accepted(xs, accepted, 5)
+    vals = np.asarray(out)[:, 0]
+    assert vals[0] == 7.0 and vals[1] == 11.0
+    assert (vals[2:] == 7.0).all()  # tail repeats an ACCEPTED row, never a reject
+    assert float(acc) == pytest.approx(2 / 20)
 
 
 def test_generative_low_confidence_bias_direction(rng):
