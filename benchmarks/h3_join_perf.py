@@ -3,21 +3,26 @@
 Sections (``--rs`` adds a third):
 
 1. distributed — per-arm wall time of the 8-device shard_map pipeline
-   (real wall clock; base / tighten / p-sweep arms), run in a subprocess so
-   the device-count flag never leaks into the parent process.
+   (real wall clock; base / tighten / p-sweep / noprune arms), run in a
+   subprocess so the device-count flag never leaks into the parent process.
+   Each arm reports its pivot-filter pruning rate (fraction of candidate
+   pairs skipping exact evaluation) and exact-evaluation count.
 2. verify-engine — the reduce-phase hot spot head-to-head: the seed's dense
    per-cell eager loop (``verify.reference_verify``) vs the streaming tiled
    engine (``verify.verify_pairs``, numpy backend = jitted/fused XLA) on one
-   shared partition plan. Reports speedup, tile/bucket counts and padding
-   occupancy. Acceptance floor: engine >= 2x at N >= 20k on CPU.
+   shared partition plan, with and without pivot-filter pruning. Reports
+   speedups, tile/bucket counts, padding occupancy, pruning rate and
+   exact-evaluation counts; asserts prune="pivot" pairs are byte-identical
+   to prune="none". Acceptance floor: engine >= 2x at N >= 20k on CPU.
 3. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
    (the skew-sensitive case), exactness-checked in-subprocess against the
-   brute-force cross oracle; reports wall time, W capacity and the S-side
-   duplication metric Σ|W_h|/|S|.
+   brute-force cross oracle; reports wall time, W capacity, the S-side
+   duplication metric Σ|W_h|/|S| and the pruning rate.
 
 Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
 smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke --rs``
-must run to completion and write it).
+must run to completion, write it, and report a NONZERO pruning rate). Schema
+of the JSON: docs/BENCHMARKS.md.
 
 Run:
     PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke] [--rs]
@@ -50,20 +55,22 @@ from repro.launch import hloparse
 mesh = jax.make_mesh((8,), ("data",))
 data = synthetic.mixture({n}, 12, n_clusters=6, skew=0.5, seed=0)
 out = []
-for (label, tighten, p) in {arms}:
+for (label, tighten, p, prune) in {arms}:
     walls = []
     for rep in range(2):  # rep 0 warms compile caches; rep 1 is steady state
         t0 = time.perf_counter()
         r = distributed.distributed_join(
             jnp.asarray(data), mesh=mesh, delta={delta}, metric="l1", k=256,
             p=p, n_dims=6, sampler="generative", backend="numpy",
-            tighten=tighten, seed=0)
+            tighten=tighten, prune=prune, seed=0)
         walls.append(time.perf_counter() - t0)
     out.append(dict(label=label, p=p, wall_cold_s=walls[0], wall_s=walls[-1],
                     hits=r.n_hits,
                     verif=r.n_verifications, cap_w=r.exact_cap_w,
                     padding=r.capacity_padding,
-                    max_cell=float(np.max(r.per_cell_verified))))
+                    max_cell=float(np.max(r.per_cell_verified)),
+                    pruning_rate=r.pruning_rate, n_exact=r.n_candidates,
+                    predicted_survival=r.predicted_survival))
 print(json.dumps(out))
 """
 
@@ -93,7 +100,8 @@ print(json.dumps(dict(
     label="rs", n_r={n_r}, n_s={n_s}, wall_cold_s=walls[0], wall_s=walls[-1],
     pairs=int(res.pairs.shape[0]), verif=res.n_verifications,
     cap_w=res.exact_cap_w, padding=res.capacity_padding,
-    duplication=res.duplication, exact=True)))
+    duplication=res.duplication, pruning_rate=res.pruning_rate,
+    n_exact=res.n_candidates, exact=True)))
 """
 
 
@@ -144,9 +152,9 @@ def run_verify_engine(n: int, delta: float) -> dict:
     member = partition.whole_membership(plan, xm)
     cells_np, member_np = np.asarray(cells), np.asarray(member)
 
-    # Symmetric protocol: min of 2 reps for BOTH paths (rep 0 warms eager
+    # Symmetric protocol: min of 2 reps for ALL paths (rep 0 warms eager
     # dispatch caches on the reference and the per-bucket compile cache on
-    # the engine), so the speedup compares steady state to steady state.
+    # the engine), so the speedups compare steady state to steady state.
     t_ref, ref_pairs, n_verif = float("inf"), None, 0
     for _ in range(2):
         t0 = time.perf_counter()
@@ -155,7 +163,7 @@ def run_verify_engine(n: int, delta: float) -> dict:
         )
         t_ref = min(t_ref, time.perf_counter() - t0)
 
-    ecfg = verify.EngineConfig(backend="numpy")
+    ecfg = verify.EngineConfig(backend="numpy", prune="none")
     t_eng, eng_pairs, stats = float("inf"), None, None
     for _ in range(2):
         t0 = time.perf_counter()
@@ -164,6 +172,22 @@ def run_verify_engine(n: int, delta: float) -> dict:
         )
         t_eng = min(t_eng, time.perf_counter() - t0)
     assert np.array_equal(ref_pairs, eng_pairs), "engine != reference pairs"
+
+    # Pivot-filter pruning arm: same plan, mapped coords as the pre-mask.
+    # Hard invariant (the engine's soundness contract): pair set is
+    # byte-identical to the unpruned run.
+    pcfg = verify.EngineConfig(backend="numpy", prune="pivot")
+    xm_np = np.asarray(xm, np.float32)
+    t_prune, prune_pairs, pstats = float("inf"), None, None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        prune_pairs, pstats = verify.verify_pairs(
+            allx, cells_np, member_np, cfg.delta, cfg.metric, config=pcfg,
+            coords=xm_np,
+        )
+        t_prune = min(t_prune, time.perf_counter() - t0)
+    assert prune_pairs.tobytes() == eng_pairs.tobytes(), "prune changed pairs"
+
     return dict(
         n=n, delta=delta, n_pairs=int(eng_pairs.shape[0]),
         n_verifications=n_verif,
@@ -171,6 +195,12 @@ def run_verify_engine(n: int, delta: float) -> dict:
         speedup=round(t_ref / max(t_eng, 1e-9), 2),
         n_tiles=stats.n_tiles, n_buckets=stats.n_buckets,
         occupancy=round(stats.occupancy, 3),
+        pruned_s=round(t_prune, 3),
+        speedup_prune=round(t_eng / max(t_prune, 1e-9), 2),
+        pruning_rate=round(pstats.prune_rate, 4),
+        n_exact=pstats.n_exact,
+        n_tiles_pruned=pstats.n_tiles_pruned,
+        prune_identical=bool(prune_pairs.tobytes() == eng_pairs.tobytes()),
     )
 
 
@@ -181,28 +211,35 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
         # `--smoke --n-verify 50000` still measures the requested N.
         n = 400 if n == 4000 else n
         n_verify = 2_000 if n_verify == 20_000 else n_verify
-        arms = [("tighten", True, 16)]
+        arms = [("tighten", True, 16, "pivot")]
     else:
-        arms = [("base", False, 16), ("tighten", True, 16),
-                ("tighten_p8", True, 8), ("tighten_p32", True, 32)]
+        arms = [("base", False, 16, "pivot"), ("tighten", True, 16, "pivot"),
+                ("tighten_p8", True, 8, "pivot"),
+                ("tighten_p32", True, 32, "pivot"),
+                ("noprune", True, 16, "none")]
 
     rows = run_distributed(n, delta, arms)
     csv = Csv("bench_h3.csv",
               ["arm", "p", "wall_warm_s", "wall_cold_s", "hits",
-               "verifications", "cap_w", "padding", "max_cell"])
+               "verifications", "n_exact", "pruning_rate", "cap_w", "padding",
+               "max_cell"])
     for r in rows:
         csv.row(r["label"], r["p"], round(r["wall_s"], 2),
                 round(r["wall_cold_s"], 2), r["hits"],
-                r["verif"], r["cap_w"], round(r["padding"], 2),
+                r["verif"], r["n_exact"], round(r["pruning_rate"], 4),
+                r["cap_w"], round(r["padding"], 2),
                 int(r["max_cell"]))
     csv.close()
 
     engine = run_verify_engine(n_verify, delta)
     csv2 = Csv("bench_h3_verify.csv",
-               ["n", "reference_s", "engine_s", "speedup", "tiles", "buckets",
-                "occupancy"])
+               ["n", "reference_s", "engine_s", "pruned_s", "speedup",
+                "speedup_prune", "pruning_rate", "n_exact", "tiles",
+                "tiles_pruned", "buckets", "occupancy"])
     csv2.row(engine["n"], engine["reference_s"], engine["engine_s"],
-             engine["speedup"], engine["n_tiles"], engine["n_buckets"],
+             engine["pruned_s"], engine["speedup"], engine["speedup_prune"],
+             engine["pruning_rate"], engine["n_exact"], engine["n_tiles"],
+             engine["n_tiles_pruned"], engine["n_buckets"],
              engine["occupancy"])
     csv2.close()
 
@@ -214,10 +251,12 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
         rs_row = run_rs(max(n // 5, 16), n, delta)
         csv3 = Csv("bench_h3_rs.csv",
                    ["n_r", "n_s", "wall_warm_s", "wall_cold_s", "pairs",
-                    "verifications", "cap_w", "padding", "duplication"])
+                    "verifications", "n_exact", "pruning_rate", "cap_w",
+                    "padding", "duplication"])
         csv3.row(rs_row["n_r"], rs_row["n_s"], round(rs_row["wall_s"], 2),
                  round(rs_row["wall_cold_s"], 2), rs_row["pairs"],
-                 rs_row["verif"], rs_row["cap_w"],
+                 rs_row["verif"], rs_row["n_exact"],
+                 round(rs_row["pruning_rate"], 4), rs_row["cap_w"],
                  round(rs_row["padding"], 2), round(rs_row["duplication"], 3))
         csv3.close()
         report["rs"] = rs_row

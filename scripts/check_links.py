@@ -1,0 +1,82 @@
+"""CI docs gate: every intra-repo markdown link must resolve.
+
+Walks all tracked ``*.md`` files, extracts inline links and images
+(``[text](target)``), and checks that relative targets exist on disk
+(anchors are stripped; external schemes and pure-anchor links are skipped).
+Exit code 1 with a per-link report when anything dangles.
+
+Run:  python scripts/check_links.py  (from the repo root or anywhere in it)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# Inline [text](target) — target up to the first unescaped ')'; tolerates
+# reference-style images and badge nesting by matching the innermost pair.
+_LINK = re.compile(r"\[[^\]]*\]\(([^()\s]+(?:\([^()]*\)[^()\s]*)*)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".ruff_cache",
+              ".hypothesis", "runs", "node_modules", ".claude"}
+
+
+def repo_root() -> str:
+    d = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(d)
+
+
+def md_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        out.extend(
+            os.path.join(dirpath, f) for f in filenames if f.endswith(".md")
+        )
+    return sorted(out)
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for path in md_files(root):
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if rel.startswith("/"):
+                resolved = os.path.join(root, rel.lstrip("/"))
+            else:
+                resolved = os.path.join(os.path.dirname(path), rel)
+            # Badge-style links into the forge UI (../../actions/...) point
+            # outside the checkout by construction; skip anything that
+            # escapes the repo root rather than guessing the forge layout.
+            if os.path.commonpath(
+                [root, os.path.abspath(resolved)]
+            ) != os.path.abspath(root):
+                continue
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, root)}: dangling link -> {target}"
+                )
+    return errors
+
+
+def main() -> int:
+    root = repo_root()
+    errors = check(root)
+    n = len(md_files(root))
+    if errors:
+        print(f"checked {n} markdown files: {len(errors)} dangling link(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"checked {n} markdown files: all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

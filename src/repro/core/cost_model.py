@@ -121,7 +121,73 @@ def predict_capacity(
     return int(np.ceil(cap / quantize) * quantize)
 
 
-def verification_count(v_sizes: np.ndarray, w_sizes: np.ndarray) -> float:
+def verification_count(
+    v_sizes: np.ndarray, w_sizes: np.ndarray, survival: float = 1.0
+) -> float:
     """The paper's Fig. 12 metric: total pairwise verifications performed,
-    Σ_h |V_h|·|W_h| (each kernel row is checked against every whole row)."""
-    return float((np.asarray(v_sizes, np.float64) * np.asarray(w_sizes, np.float64)).sum())
+    Σ_h |V_h|·|W_h| (each kernel row is checked against every whole row).
+
+    ``survival`` makes the estimate pruning-aware: with the pivot filter
+    enabled only a ``survival`` fraction of candidate pairs reaches exact
+    metric evaluation (estimate it with :func:`estimate_survival_rate`), so
+    the expected exact-evaluation count is G·survival. The default 1.0 is
+    the unpruned paper quantity.
+    """
+    g = float(
+        (np.asarray(v_sizes, np.float64) * np.asarray(w_sizes, np.float64)).sum()
+    )
+    return g * float(np.clip(survival, 0.0, 1.0))
+
+
+def estimate_survival_rate(
+    piv_mapped: np.ndarray,
+    delta: float,
+    cells: np.ndarray | None = None,
+    member: np.ndarray | None = None,
+    chunk: int = 256,
+) -> float:
+    """Sample-based estimate of the pivot-filter survival fraction.
+
+    ``piv_mapped``: (k, n) mapped coordinates of the sampled pivots — the
+    same sample that sizes the partitions. The estimate is the fraction of
+    off-diagonal pivot pairs whose L∞ lower bound is ≤ δ; 1 − survival is
+    the predicted pruning rate, and G·survival (see
+    :func:`verification_count`) the expected exact-evaluation count. Same
+    Theorem-3 reasoning as the box-count estimates: the bound is a function
+    of the marginal coordinate distributions the sample approximates.
+
+    ``cells``/``member`` (the pivots' kernel assignment and whole
+    membership, as produced for :func:`estimate_from_samples`) restrict the
+    estimate to CANDIDATE pairs — pivot j whole-member of pivot i's kernel
+    cell, the V×W structure the verify phase actually enumerates. Without
+    them the estimate averages over all pairs, which skews low: candidate
+    pairs are co-partitioned, hence closer than random pairs and more likely
+    to survive the bound.
+
+    Row-chunked so the (k, k, n) broadcast never materializes (k can be the
+    full pivot budget, ~10³–10⁴).
+    """
+    x = np.asarray(piv_mapped, np.float32)
+    k = x.shape[0]
+    if k < 2:
+        return 1.0
+    restrict = cells is not None and member is not None
+    if restrict:
+        cells = np.asarray(cells)
+        member = np.asarray(member, bool)
+    surviving = 0
+    total = 0
+    for i0 in range(0, k, chunk):
+        xi = x[i0 : i0 + chunk]
+        c = xi.shape[0]
+        bound = np.abs(xi[:, None, :] - x[None, :, :]).max(-1)  # (c, k)
+        if restrict:
+            cand = member[:, cells[i0 : i0 + c]].T  # (c, k) — V×W structure
+        else:
+            cand = np.ones_like(bound, bool)
+        cand[np.arange(c), i0 + np.arange(c)] = False  # drop the diagonal
+        surviving += int((cand & (bound <= delta)).sum())
+        total += int(cand.sum())
+    if total == 0:
+        return 1.0
+    return float(surviving / total)

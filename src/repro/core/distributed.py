@@ -30,9 +30,11 @@ The paper's three phases map onto three jitted ``shard_map`` stages over the
   stage_verify   map + reduce phases: space-map (Pallas pairdist vs anchors),
                  kernel-cell assignment, whole membership, capacity-bounded
                  dispatch buffers, ONE ``all_to_all`` over the data axis
-                 (the shuffle), then per-local-cell blocked verification
-                 (Pallas pairdist + fused ≤ δ mask). Pair de-dup happens in
-                 the mask epilogue via the min-cell rule.
+                 (the shuffle — with ``prune="pivot"`` the mapped
+                 coordinates ride it as trailing payload columns), then
+                 per-local-cell blocked verification (pivot-filter L∞
+                 pre-mask + Pallas pairdist + fused ≤ δ mask). Pair de-dup
+                 happens in the mask epilogue via the min-cell rule.
 
 Skew economics on TPU: a skewed partition no longer straggles — it inflates
 the static capacity every device must allocate and stream. The padding ratio
@@ -319,11 +321,28 @@ def _scatter_dispatch(
 
 @dataclasses.dataclass(frozen=True)
 class VerifyConfig:
+    """Static knobs compiled into the verify stage.
+
+    ``cap_v`` / ``cap_w``: per-(cell, source-shard) dispatch capacities — the
+    static shapes the ``all_to_all`` buffers compile with (exact-fit planned
+    by the counting pass, times ``capacity_slack``).
+    ``prune``: "none" | "pivot" — pivot-filter pruning in the verify tiles.
+    With "pivot" each row's mapped coordinates are concatenated onto its
+    payload so they ride the SAME ``all_to_all`` as the data (n extra f32
+    columns of shuffle volume), and the per-cell verification masks pairs
+    whose L∞ lower bound exceeds δ before exact evaluation. Metrics without
+    the triangle inequality (cosine, dot) resolve back to "none" —
+    capability, not error (see ``core.verify.resolve_prune``).
+    """
+
     cap_v: int  # per-(cell, source-shard) kernel-row capacity
     cap_w: int  # per-(cell, source-shard) whole-row capacity
     emit_pairs: bool = False  # also return hit masks + id buffers (tests)
     backend: str = "auto"  # numpy | pallas | auto (see kernels.ops)
     use_kernel: bool | None = None  # legacy override of backend
+    prune: str = "none"  # pivot-filter pruning: "none" | "pivot"
+    delta_bound: float | None = None  # scale-aware fp band for the filter
+    #   (verify.prune_band; None -> the scale-free ref.prune_delta default)
 
 
 def make_stage_verify(
@@ -343,6 +362,14 @@ def make_stage_verify(
     scattered from R's shards (kernel cells), W buffers from S's shards
     (whole membership), one ``all_to_all`` each, and the de-dup rule
     degenerates to padding validity (each R row has a unique kernel cell).
+
+    With ``vcfg.prune="pivot"`` the mapped coordinates (already computed by
+    the in-stage ``_map_assign``) are appended to each row's payload before
+    dispatch — the pivot distances ride the same ``all_to_all`` as the data
+    — and split back off at the destination cell, where ``verify_tile``
+    applies the L∞ pre-mask. Hit masks (hence emitted pairs) are identical
+    to ``prune="none"``; the ``candidates`` output tracks how many pairs
+    survived the filter (pruning-rate telemetry).
     """
     M = mesh.shape[axis]
     p = plan.p
@@ -350,6 +377,9 @@ def make_stage_verify(
     p_loc = p // M
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
     backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
+    prune = verify_lib.resolve_prune(vcfg.prune, plan.metric, True)
+    n_dims = plan.anchors.shape[0]
+    delta_bound = vcfg.delta_bound  # static — shared by mask + telemetry
 
     def v_dispatch(x: Array, ids: Array, cells: Array, v: Array):
         """Each valid row -> its kernel cell."""
@@ -405,25 +435,38 @@ def make_stage_verify(
         my_dev = jax.lax.axis_index(axis)
         local_cells = my_dev * p_loc + jnp.arange(p_loc)  # global cell ids here
 
-        # Distances, threshold, padding validity and the de-dup rule all
-        # live in repro.core.verify — the same code path the reference
-        # executor streams through.
+        # Distances, threshold, padding validity, the de-dup rule and the
+        # pivot filter all live in repro.core.verify — the same code path
+        # the reference executor streams through.
         def verify_cell(vx, vids, vown, wx, wids, wown, cell_id):
+            pv = pw = None
+            if prune == "pivot":
+                # Mapped coords rode the payload's trailing n_dims columns.
+                vx, pv = vx[:, :-n_dims], vx[:, -n_dims:]
+                wx, pw = wx[:, :-n_dims], wx[:, -n_dims:]
             mask = verify_lib.verify_tile(
                 vx, wx, vids, wids, wown, cell_id,
                 delta=plan.delta, metric=plan.metric, backend=backend,
-                cross=cross,
+                cross=cross, pv=pv, pw=pw, prune=prune,
+                delta_bound=delta_bound,
             )
             n_verified = verify_lib.pair_validity(vids, wids).sum()
-            return mask, n_verified
+            if prune == "pivot":
+                n_cand = verify_lib.candidate_mask(
+                    pv, pw, vids, wids, plan.delta, delta_bound
+                ).sum()
+            else:
+                n_cand = n_verified
+            return mask, n_verified, n_cand
 
-        masks, n_verified = jax.vmap(verify_cell)(
+        masks, n_verified, n_cand = jax.vmap(verify_cell)(
             fv, fvi, fvo, fw, fwi, fwo, local_cells
         )
         hit_count = masks.sum()
         out = {
             "hits": hit_count.astype(jnp.float32)[None],
             "verified": n_verified.sum().astype(jnp.float32)[None],
+            "candidates": n_cand.sum().astype(jnp.float32)[None],
             "per_cell_verified": n_verified.astype(jnp.float32),
             "overflow": overflow.astype(jnp.float32)[None],
         }
@@ -433,13 +476,25 @@ def make_stage_verify(
             out["w_ids"] = fwi
         return out
 
+    def payload(x: Array, xm: Array) -> Array:
+        """Dispatch rows: the raw features, plus — under prune="pivot" — the
+        mapped coordinates as trailing columns (same all_to_all, no second
+        shuffle)."""
+        if prune == "pivot":
+            return jnp.concatenate([x, xm.astype(x.dtype)], axis=1)
+        return x
+
     if cross:
         def per_shard(xr: Array, valid_r: Array, ids_r: Array,
                       xs: Array, valid_s: Array, ids_s: Array):
-            cells_r, _, v_r, _ = _map_assign(plan, xr, valid_r, backend)
-            cells_s, member_s, _, _ = _map_assign(plan, xs, valid_s, backend)
-            v_buf, v_ids, v_own, overflow_v = v_dispatch(xr, ids_r, cells_r, v_r)
-            w_buf, w_ids, w_own, overflow_w = w_dispatch(xs, ids_s, cells_s, member_s)
+            cells_r, _, v_r, xm_r = _map_assign(plan, xr, valid_r, backend)
+            cells_s, member_s, _, xm_s = _map_assign(plan, xs, valid_s, backend)
+            v_buf, v_ids, v_own, overflow_v = v_dispatch(
+                payload(xr, xm_r), ids_r, cells_r, v_r
+            )
+            w_buf, w_ids, w_own, overflow_w = w_dispatch(
+                payload(xs, xm_s), ids_s, cells_s, member_s
+            )
             return shuffle_and_verify(
                 (v_buf, v_ids, v_own), (w_buf, w_ids, w_own),
                 overflow_v + overflow_w,
@@ -447,9 +502,10 @@ def make_stage_verify(
         in_specs = (P(axis),) * 6
     else:
         def per_shard(x: Array, valid: Array, ids: Array):
-            cells, member, v, _ = _map_assign(plan, x, valid, backend)
-            v_buf, v_ids, v_own, overflow_v = v_dispatch(x, ids, cells, v)
-            w_buf, w_ids, w_own, overflow_w = w_dispatch(x, ids, cells, member)
+            cells, member, v, xm = _map_assign(plan, x, valid, backend)
+            rows = payload(x, xm)
+            v_buf, v_ids, v_own, overflow_v = v_dispatch(rows, ids, cells, v)
+            w_buf, w_ids, w_own, overflow_w = w_dispatch(rows, ids, cells, member)
             return shuffle_and_verify(
                 (v_buf, v_ids, v_own), (w_buf, w_ids, w_own),
                 overflow_v + overflow_w,
@@ -459,6 +515,7 @@ def make_stage_verify(
     out_specs = {
         "hits": P(axis),
         "verified": P(axis),
+        "candidates": P(axis),
         "per_cell_verified": P(axis),
         "overflow": P(axis),
     }
@@ -482,6 +539,15 @@ def make_stage_verify(
 
 @dataclasses.dataclass
 class DistJoinResult:
+    """Driver-level result + telemetry of one distributed join.
+
+    ``n_verifications`` is the candidate pair area (Σ_h |V_h|·|W_h| over
+    dispatched buffers — the paper's Fig. 12 metric, independent of prune
+    mode); ``n_candidates`` is the subset surviving the pivot filter, i.e.
+    the pairs that actually reach exact metric evaluation (== n_verifications
+    when pruning is off).
+    """
+
     n_hits: int
     n_verifications: int
     per_cell_verified: np.ndarray  # (p,) — Table 3 balance metric
@@ -494,6 +560,10 @@ class DistJoinResult:
     pairs: np.ndarray | None = None  # (n_pairs, 2) when emit_pairs; self-join
     #   columns are (min, max) over one set — R×S: (i ∈ R, j ∈ S)
     duplication: float = 0.0  # Σ|W_h| / |S| (|S|=N for self) — shuffle amp.
+    n_candidates: int = 0  # pairs surviving the pivot filter (exact evals)
+    pruning_rate: float = 0.0  # 1 − n_candidates / n_verifications
+    predicted_survival: float = 1.0  # cost-model (sample-based) survival est.
+    prune: str = "none"  # resolved prune mode the stage compiled with
 
 
 def _pad_shard_set(x: Array, M: int, sharding) -> tuple[Array, Array, Array, int]:
@@ -531,6 +601,7 @@ def distributed_join(
     use_kernel: bool | None = None,
     capacity_slack: float = 1.0,
     tighten: bool = True,
+    prune: str = "pivot",
     seed: int = 0,
     s: Array | None = None,
 ) -> DistJoinResult:
@@ -557,6 +628,13 @@ def distributed_join(
     kernel-less metrics), the distributed stages require a kernel metric on
     every path — fail fast with the supported set rather than deep in a
     shard_map trace.
+
+    ``prune``: "pivot" (default) masks out candidate pairs whose L∞
+    lower bound over the mapped coordinates exceeds δ before exact
+    evaluation; the coordinates ride the dispatch ``all_to_all`` as trailing
+    payload columns. Results are byte-identical to ``prune="none"`` — the
+    bound never eliminates a true hit — and the pruning rate is reported in
+    the result. Cosine (no triangle inequality) resolves back to "none".
     """
     if not kops.supports_kernel(metric):
         raise ValueError(
@@ -699,7 +777,27 @@ def distributed_join(
     cap_w = int(np.ceil(exact_cap_w * capacity_slack))
 
     # ---- dispatch + verify ---------------------------------------------------
-    vcfg = VerifyConfig(cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend)
+    prune_resolved = verify_lib.resolve_prune(prune, metric, True)
+    delta_bound = (
+        verify_lib.prune_band(delta, metric, data, s_arr if cross else None)
+        if prune_resolved == "pivot"
+        else None
+    )
+    vcfg = VerifyConfig(
+        cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend,
+        prune=prune, delta_bound=delta_bound,
+    )
+    # Sample-based pruning forecast (same pivots that sized the capacities):
+    # the fraction of CANDIDATE pivot pairs (V×W co-residency) surviving the
+    # L∞ bound estimates the post-filter exact-evaluation fraction.
+    predicted_survival = (
+        cost_model.estimate_survival_rate(
+            np.asarray(piv_mapped), delta,
+            cells=np.asarray(piv_cells), member=np.asarray(piv_member),
+        )
+        if prune_resolved == "pivot"
+        else 1.0
+    )
     verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross)
     out = (
         verify_fn(data, valid, ids, s_arr, valid_s, ids_s)
@@ -727,9 +825,11 @@ def distributed_join(
             pr = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)], 1)
         pairs = np.unique(pr, axis=0).astype(np.int64) if pr.size else np.zeros((0, 2), np.int64)
 
+    n_verifications = int(np.asarray(out["verified"]).sum())
+    n_candidates = int(np.asarray(out["candidates"]).sum())
     return DistJoinResult(
         n_hits=int(out["hits"].sum()) if np.asarray(out["hits"]).ndim else int(out["hits"]),
-        n_verifications=int(np.asarray(out["verified"]).sum()),
+        n_verifications=n_verifications,
         per_cell_verified=per_cell,
         overflow=int(np.asarray(out["overflow"]).sum()),
         capacity_padding=float(padding),
@@ -739,4 +839,8 @@ def distributed_join(
         accept_rate=accept_rate,
         pairs=pairs,
         duplication=float(actual_w / max(n_s, 1)),
+        n_candidates=n_candidates,
+        pruning_rate=float(1.0 - n_candidates / max(n_verifications, 1)),
+        predicted_survival=float(predicted_survival),
+        prune=prune_resolved,
     )

@@ -238,6 +238,11 @@ def build_partition(
 def assign_kernel(plan: PartitionPlan, x_mapped: Array) -> Array:
     """KERNEL cell id per object: the unique leaf box containing it.
 
+    This defines the V side of the reduce phase: V_h = {o : cell(o) = h} —
+    every object is verified (as the "query" side) in exactly ONE cell,
+    which is what makes the min-cell de-dup rule in ``core.verify`` emit
+    each pair exactly once.
+
     Boxes are half-open [lo, hi) and tile ℝⁿ, so exactly one matches; argmax
     over the (N, p) containment mask returns it. O(N·p·n) — vectorized.
     """
@@ -248,7 +253,15 @@ def assign_kernel(plan: PartitionPlan, x_mapped: Array) -> Array:
 
 
 def whole_membership(plan: PartitionPlan, x_mapped: Array) -> Array:
-    """(N, p) bool — WHOLE partition membership (δ-expanded, closed boxes)."""
+    """(N, p) bool — WHOLE partition membership (δ-expanded, closed boxes).
+
+    This defines the W side of the reduce phase: W_h = {o : o within the
+    δ-expanded box of cell h} ⊇ V_h. An object may be whole-member of many
+    cells (the shuffle duplication Σ|W_h|/N); Lemma 4 guarantees every
+    δ-neighbour of a V_h row appears in W_h, so verifying V_h × W_h per
+    cell is complete. In R×S mode this is evaluated on S's mapped rows
+    (W from S) while kernel assignment runs on R (V from R).
+    """
     inside = (x_mapped[:, None, :] >= plan.whole_lo[None]) & (
         x_mapped[:, None, :] <= plan.whole_hi[None]
     )
@@ -277,7 +290,12 @@ def tighten(plan: PartitionPlan, x_mapped: Array, cell_ids: Array) -> PartitionP
 
 
 def partition_stats(cell_ids: np.ndarray, membership: np.ndarray) -> dict:
-    """|V_h| and |W_h| per cell — feeds the cost model and Table 3 metrics."""
+    """Per-cell partition sizes, ``{"v_sizes": (p,), "w_sizes": (p,)}``.
+
+    ``v_sizes[h]`` = |V_h| (kernel rows), ``w_sizes[h]`` = |W_h| (whole
+    rows) — the inputs of Eq. 33 (``cost_model.partition_cost``) and the
+    Table 3 balance metrics; Σ v_sizes·w_sizes is the candidate
+    verification count of the reduce phase (Fig. 12)."""
     p = membership.shape[1]
     v = np.bincount(np.asarray(cell_ids), minlength=p).astype(np.int64)
     w = np.asarray(membership).sum(0).astype(np.int64)

@@ -53,11 +53,14 @@ class JoinConfig:
     backend: str = "auto"  # verify engine: numpy | pallas | auto
     tile_v: int = 1024  # verify engine streaming tile (V side)
     tile_w: int = 4096  # verify engine streaming tile (W side)
+    prune: str = "pivot"  # pivot-filter pruning: "pivot" | "none" (sound for
+    #   true metrics; cosine resolves back to "none" — see core.verify)
     seed: int = 0
 
     def engine_config(self) -> verify_lib.EngineConfig:
         return verify_lib.EngineConfig(
-            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w
+            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w,
+            prune=self.prune,
         )
 
 
@@ -214,16 +217,23 @@ def join(
         # every S partner: it lies within L∞ δ of an R member of the cell.
         plan = partition.tighten(plan, x_mapped, cells)
     if cross:
+        s_mapped = (
+            smap(s_all) if s_all.shape[0] else jnp.zeros((0, smap.n_dims), jnp.float32)
+        )
         member = (
-            partition.whole_membership(plan, smap(s_all))
+            partition.whole_membership(plan, s_mapped)
             if s_all.shape[0]
             else jnp.zeros((0, plan.p), bool)
         )
     else:
+        s_mapped = None
         member = partition.whole_membership(plan, x_mapped)
     t_map = time.perf_counter() - t0
 
     # ---- reduce phase: streaming tiled verify engine ---------------------
+    # The mapped coordinates double as the verify phase's pivot filter
+    # (prune="pivot"): the map phase already paid for them, the engine only
+    # gathers them into tiles alongside the payload.
     t0 = time.perf_counter()
     cells_np = np.asarray(cells)
     member_np = np.asarray(member)
@@ -232,6 +242,7 @@ def join(
         allx, cells_np, member_np, cfg.delta, cfg.metric,
         config=cfg.engine_config(), return_pairs=return_pairs,
         data_w=s_all if cross else None,
+        coords=x_mapped, coords_w=s_mapped,
     )
     t_verify = time.perf_counter() - t0
 

@@ -38,6 +38,27 @@ one kernel cell and Lemma 4 puts every δ-neighbour s ∈ S inside that cell's
 whole box, so "emit in R's kernel cell only" already yields each cross pair
 exactly once — the min-cell + id ordering rule degenerates to plain padding
 validity, and emitted pairs are (i ∈ R, j ∈ S), never reordered.
+
+Pivot-filter pruning (``prune="pivot"`` — the DIMS-style triangle-inequality
+candidate filter, run BEFORE any exact metric evaluation):
+
+  * Each object's mapped coordinates (its distances to the shared anchors,
+    produced once by ``core.mapping``) are threaded into the tiles alongside
+    the payload rows. Every coordinate is 1-Lipschitz, so
+    ``max_p |d(v,p) − d(w,p)|`` is a lower bound on D(v, w): a pair whose
+    bound exceeds δ cannot be a hit and skips exact evaluation.
+  * The bound is evaluated against a slightly slackened threshold
+    (``ref.prune_delta`` — an fp guard band), which makes the filter sound
+    in fp32 as well: fixed-seed pair sets are BYTE-IDENTICAL between
+    ``prune="pivot"`` and ``prune="none"``. Pruning is a pure optimization,
+    never a semantics change.
+  * The streaming engine skips a tile's exact-distance call outright when
+    every pair in it is pruned (``VerifyStats.n_tiles_pruned``); surviving
+    tiles run the fused filter+pairdist kernel, whose Pallas path likewise
+    skips the MXU/VPU accumulation for all-pruned blocks.
+  * Capability, not error: metrics without the triangle inequality (cosine,
+    dot) silently resolve to ``prune="none"`` — same treatment as backends
+    without a kernel.
 """
 from __future__ import annotations
 
@@ -66,23 +87,39 @@ class EngineConfig:
     ``tile_v`` / ``tile_w``: streaming tile capacity (rows per side). Peak
     per-tile footprint ≈ tile_v·tile_w bytes of mask + gathered rows.
     ``min_bucket``: smallest padded tile side; tiles below it still pad up.
+    ``prune``: "none" | "pivot" — pivot-filter pruning (L∞ lower bound over
+    mapped coordinates, module docstring). "pivot" requires the caller to
+    pass ``coords`` (and ``coords_w`` in R×S mode); metrics without the
+    triangle inequality resolve back to "none" (capability, not error).
     """
 
     backend: str = "auto"
     tile_v: int = 1024
     tile_w: int = 4096
     min_bucket: int = 8
+    prune: str = "none"
 
 
 @dataclasses.dataclass
 class VerifyStats:
-    """What the engine actually did — fed to benchmarks and Table-3 metrics."""
+    """What the engine actually did — fed to benchmarks and Table-3 metrics.
+
+    ``n_verifications`` keeps its paper meaning (Σ_h |V_h|·|W_h|, the
+    CANDIDATE pair area) so Fig.-12 numbers stay comparable across prune
+    modes; ``n_exact`` is the subset that actually reached exact metric
+    evaluation after the pivot filter (== n_verifications when pruning is
+    off).
+    """
 
     n_verifications: int = 0  # Σ_h |V_h|·|W_h| (valid pair area)
-    n_padded: int = 0  # Σ padded tile area actually dispatched
-    n_tiles: int = 0
+    n_padded: int = 0  # Σ padded tile area dispatched to exact evaluation
+    n_dispatched: int = 0  # valid pair area of tiles that ran exact evaluation
+    n_tiles: int = 0  # tiles that ran exact evaluation
     n_cells: int = 0  # non-empty cells
     n_hits: int = 0  # emitted (de-duplicated) hits
+    n_pruned: int = 0  # valid pairs eliminated by the pivot filter
+    n_tiles_pruned: int = 0  # tiles skipped outright (every pair pruned)
+    prune: str = "none"  # resolved prune mode the engine actually ran
     bucket_shapes: set = dataclasses.field(default_factory=set)
 
     @property
@@ -91,8 +128,20 @@ class VerifyStats:
 
     @property
     def occupancy(self) -> float:
-        """Valid / padded verification ratio — 1.0 means zero padding waste."""
-        return self.n_verifications / max(self.n_padded, 1)
+        """Valid / padded ratio of the exact-evaluation dispatch — 1.0 means
+        zero padding waste. Tiles the pivot filter skipped count in neither
+        numerator nor denominator (they cost a bound pass, not a dispatch)."""
+        return self.n_dispatched / max(self.n_padded, 1)
+
+    @property
+    def n_exact(self) -> int:
+        """Pairs that reached exact metric evaluation (post-filter)."""
+        return self.n_verifications - self.n_pruned
+
+    @property
+    def prune_rate(self) -> float:
+        """Fraction of candidate pairs the pivot filter eliminated."""
+        return self.n_pruned / max(self.n_verifications, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -139,15 +188,51 @@ def verify_tile(
     metric: str,
     backend: str,
     cross: bool = False,
+    pv: Array | None = None,
+    pw: Array | None = None,
+    prune: str = "none",
+    premask: Array | None = None,
+    delta_bound: float | None = None,
 ) -> Array:
-    """One tile's fused verify: distances, threshold, validity, de-dup.
+    """One tile's fused verify: (filter,) distances, threshold, validity, de-dup.
 
     jit-safe; the streaming engine wraps it in its own jit, the distributed
-    stage calls it inside shard_map. ``backend`` must already be concrete
-    ("numpy" | "pallas" — resolve with :func:`resolve_engine_backend`).
-    ``cross=True`` switches to R×S semantics (validity only, no min-cell).
+    stage calls it inside shard_map. ``backend`` and ``prune`` must already
+    be concrete (resolve with :func:`resolve_engine_backend` /
+    :func:`resolve_prune`). ``cross=True`` switches to R×S semantics
+    (validity only, no min-cell). With ``prune="pivot"``, ``pv``/``pw`` are
+    the tiles' mapped coordinates and the hit mask is additionally ANDed with
+    the L∞ lower-bound survivor mask — identical output by construction (the
+    bound never prunes a true hit), but the Pallas path skips exact-distance
+    work for all-pruned blocks. ``premask`` (jnp-path only): a survivor mask
+    the caller already computed via :func:`candidate_mask` — reused instead
+    of re-deriving the bound, so the streaming engine pays for it once.
+    ``delta_bound``: the (scale-aware) slackened prune threshold — compute
+    it ONCE per join with ``ref.prune_delta(delta, metric, x_abs, m)`` and
+    pass the same value to every sub-mask (pre-pass, fused kernel, stats)
+    so they can never disagree; None falls back to the scale-free band.
     """
-    if backend == "pallas":
+    if prune == "pivot":
+        if backend == "pallas":
+            # Fused kernel recomputes the (cheap, VPU) bound in-block — that
+            # is what lets it skip the MXU/VPU exact work per pruned block.
+            hits = kops.pairdist_mask_filtered(
+                xv, xw, pv, pw, delta, metric, delta_bound=delta_bound,
+                use_kernel=True,
+            )
+        else:
+            bound = (
+                premask
+                if premask is not None
+                else ref.bound_mask(pv, pw, delta, delta_bound)
+            )
+            if metric in ref.METRICS:
+                hits = ref.pairdist_mask(xv, xw, delta, metric) & bound
+            else:
+                # True metrics only the reference module knows (angular,
+                # jaccard_minhash): same bound, jnp distance path.
+                hits = (distances.pairwise(xv, xw, metric) <= delta) & bound
+    elif backend == "pallas":
         hits = kops.pairdist_mask(xv, xw, delta, metric, use_kernel=True)
     elif metric in ref.METRICS:
         hits = ref.pairdist_mask(xv, xw, delta, metric)
@@ -165,9 +250,75 @@ def resolve_engine_backend(backend: str, metric: str) -> str:
     return kops.resolve_backend(backend, metric)
 
 
+def prune_supported(metric: str) -> bool:
+    """True when the pivot filter is sound for ``metric``: the L∞ lower
+    bound needs the triangle inequality, i.e. a TRUE metric (excludes cosine
+    and dot — see ``distances.Metric.true_metric``)."""
+    m = distances.METRICS.get(metric)
+    return m is not None and m.true_metric
+
+
+def resolve_prune(prune: str, metric: str, have_coords: bool) -> str:
+    """Resolve a prune request to a concrete "none" | "pivot".
+
+    Mirrors :func:`resolve_engine_backend`: a metric the filter is unsound
+    for (no triangle inequality) falls back to "none" — capability, not
+    error. Requesting "pivot" WITHOUT mapped coordinates, however, is a
+    caller bug and raises.
+    """
+    if prune not in ("none", "pivot"):
+        raise ValueError(f'unknown prune mode {prune!r}; expected "none" | "pivot"')
+    if prune == "pivot" and not have_coords:
+        raise ValueError(
+            'prune="pivot" requires the mapped coordinates (coords / coords_w)'
+        )
+    if prune == "pivot" and not prune_supported(metric):
+        return "none"
+    return prune
+
+
+def candidate_mask(
+    pv: Array,
+    pw: Array,
+    vids: Array,
+    wids: Array,
+    delta: float,
+    delta_bound: float | None = None,
+) -> Array:
+    """(a, b) bool — pivot-filter SURVIVORS among valid pairs: the L∞ lower
+    bound over mapped coordinates is within the (fp-slackened) threshold and
+    neither side is padding. Hits are always a subset of this mask when the
+    caller passes the SAME ``delta_bound`` here and to the verify call.
+    jit-safe; used for pruning-rate telemetry and the streaming engine's
+    whole-tile skip."""
+    return ref.bound_mask(pv, pw, delta, delta_bound) & pair_validity(vids, wids)
+
+
+def prune_band(
+    delta: float,
+    metric: str,
+    *arrays: Array | np.ndarray | None,
+) -> float:
+    """The scale-aware prune threshold for a join over ``arrays`` (payload
+    sets; None entries skipped): ``ref.prune_delta`` fed with the joint
+    coordinate magnitude and feature count. One value per join, shared by
+    every mask so the filter is self-consistent."""
+    x_abs = 0.0
+    n_feat = 0
+    for a in arrays:
+        if a is None or a.shape[0] == 0:
+            continue
+        x_abs = max(x_abs, float(jnp.max(jnp.abs(a))))
+        n_feat = max(n_feat, int(a.shape[1]))
+    return ref.prune_delta(delta, metric, x_abs, n_feat)
+
+
 _tile_verify = jax.jit(
-    verify_tile, static_argnames=("delta", "metric", "backend", "cross")
+    verify_tile,
+    static_argnames=("delta", "metric", "backend", "cross", "prune", "delta_bound"),
 )
+
+_tile_candidates = jax.jit(candidate_mask, static_argnames=("delta", "delta_bound"))
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +370,8 @@ def verify_cell_lists(
     config: EngineConfig = EngineConfig(),
     return_pairs: bool = True,
     data_w: Array | np.ndarray | None = None,
+    coords: Array | np.ndarray | None = None,
+    coords_w: Array | np.ndarray | None = None,
 ) -> tuple[np.ndarray, VerifyStats]:
     """Run the full reduce phase over explicit per-cell index sets.
 
@@ -230,13 +383,32 @@ def verify_cell_lists(
     (the S side) while ``v_lists``/``cells_of`` index ``data`` (the R side);
     pairs come back as (i ∈ R, j ∈ S) — not reordered, unique by
     construction (each R row sits in exactly one kernel cell).
+
+    Pivot-filter pruning: with ``config.prune="pivot"``, ``coords`` is the
+    (N, n) mapped-coordinate matrix of ``data`` (``coords_w`` of ``data_w``
+    in two-set mode). Per tile the engine first evaluates the cheap L∞
+    lower-bound mask (O(tile·n) vs O(tile·m) exact work); a tile with zero
+    surviving pairs skips exact evaluation entirely, the rest run the fused
+    filter+pairdist kernel. Output pairs are byte-identical to
+    ``prune="none"`` — the filter only ever removes non-hits.
     """
     data_np = np.asarray(data, np.float32)
     cells_np = np.asarray(cells_of)
     cross = data_w is not None
     data_w_np = np.asarray(data_w, np.float32) if cross else data_np
     backend = resolve_engine_backend(config.backend, metric)
-    stats = VerifyStats()
+    have_coords = coords is not None and (not cross or coords_w is not None)
+    prune = resolve_prune(config.prune, metric, have_coords)
+    delta_bound = None
+    if prune == "pivot":
+        coords_np = np.asarray(coords, np.float32)
+        coords_w_np = np.asarray(coords_w, np.float32) if cross else coords_np
+        # One scale-aware fp guard band for the whole call — every sub-mask
+        # (pre-pass, fused kernel) shares it, so hits ⊆ candidates always.
+        delta_bound = prune_band(
+            delta, metric, data_np, data_w_np if cross else None
+        )
+    stats = VerifyStats(prune=prune)
     chunks: list[np.ndarray] = []
 
     for h, (v_idx, w_idx) in enumerate(zip(v_lists, w_lists)):
@@ -257,20 +429,40 @@ def verify_cell_lists(
             wc = np.full((cap_w,), -1, np.int64)
             if not cross:  # W kernel cells only exist / matter for self-join
                 wc[: wt.size] = cells_np[wt]
-            w_tiles.append((wt, cap_w, xw, wids, wc))
+            pw = _pad_gather(coords_w_np, wt, cap_w)[0] if prune == "pivot" else None
+            w_tiles.append((wt, cap_w, xw, wids, wc, pw))
         for v0 in range(0, v_idx.size, config.tile_v):
             vt = v_idx[v0 : v0 + config.tile_v]
             cap_v = bucket_size(vt.size, config.tile_v, config.min_bucket)
             xv, vids = _pad_gather(data_np, vt, cap_v)
-            for wt, cap_w, xw, wids, wc in w_tiles:
+            pv = _pad_gather(coords_np, vt, cap_v)[0] if prune == "pivot" else None
+            for wt, cap_w, xw, wids, wc, pw in w_tiles:
+                n_valid = int(vt.size) * int(wt.size)
+                premask = None
+                if prune == "pivot":
+                    # Cheap pre-pass: O(tile·n) bound vs O(tile·m) exact.
+                    cand_dev = _tile_candidates(
+                        pv, pw, vids, wids, delta=float(delta),
+                        delta_bound=delta_bound,
+                    )
+                    n_cand = int(np.asarray(cand_dev).sum())
+                    stats.n_pruned += n_valid - n_cand
+                    if n_cand == 0:
+                        # Every pair pruned: the exact kernel never runs.
+                        stats.n_tiles_pruned += 1
+                        continue
+                    if backend != "pallas":
+                        premask = cand_dev  # jnp path reuses the bound
                 stats.n_tiles += 1
                 stats.n_padded += cap_v * cap_w
+                stats.n_dispatched += n_valid
                 stats.bucket_shapes.add((cap_v, cap_w))
                 mask = np.asarray(
                     _tile_verify(
                         xv, xw, vids, wids, wc, h,
                         delta=float(delta), metric=metric, backend=backend,
-                        cross=cross,
+                        cross=cross, pv=pv, pw=pw, prune=prune, premask=premask,
+                        delta_bound=delta_bound,
                     )
                 )
                 if not mask.any():
@@ -303,6 +495,8 @@ def verify_pairs(
     config: EngineConfig = EngineConfig(),
     return_pairs: bool = True,
     data_w: Array | np.ndarray | None = None,
+    coords: Array | np.ndarray | None = None,
+    coords_w: Array | np.ndarray | None = None,
 ) -> tuple[np.ndarray, VerifyStats]:
     """Reduce phase from a kernel-cell assignment + whole-membership matrix.
 
@@ -312,6 +506,9 @@ def verify_pairs(
     R×S: ``data``/``cells`` describe R (the V side); ``data_w`` is S and
     ``member`` is then S's whole membership (|S|, p) — V_h comes from R's
     kernel cells, W_h from S's whole membership.
+
+    ``coords`` / ``coords_w``: mapped coordinates of ``data`` / ``data_w``
+    (required when ``config.prune="pivot"`` — see the module docstring).
 
     Derives the per-cell index sets and streams them through
     :func:`verify_cell_lists`.
@@ -326,6 +523,7 @@ def verify_pairs(
     return verify_cell_lists(
         data, cells_np, v_lists, w_lists, delta, metric,
         config=config, return_pairs=return_pairs, data_w=data_w,
+        coords=coords, coords_w=coords_w,
     )
 
 

@@ -156,6 +156,79 @@ def pairdist_mask(
     return out[:a, :b].astype(bool)
 
 
+PRUNABLE_METRICS = ("l1", "l2", "linf")
+
+
+def supports_prune(metric: str) -> bool:
+    """True when the pivot filter is SOUND for ``metric`` on the kernel path.
+
+    The L-inf lower bound over anchor distances needs the triangle inequality
+    in the origin metric; "cosine" and "dot" are not true metrics, so pruning
+    could drop genuine hits there. (The engine-level capability check in
+    ``core.verify`` additionally admits the reference-only true metrics —
+    angular, jaccard_minhash — which never reach this kernel.)
+    """
+    return metric in PRUNABLE_METRICS
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "metric", "delta", "delta_bound", "bv", "bw", "bm", "backend",
+        "use_kernel",
+    ),
+)
+def pairdist_mask_filtered(
+    x: Array,
+    y: Array,
+    px: Array,
+    py: Array,
+    delta: float,
+    metric: str = "l2",
+    *,
+    delta_bound: float | None = None,
+    bv: int = 128,
+    bw: int = 128,
+    bm: int | None = None,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+) -> Array:
+    """Fused pivot-filter + thresholded join mask (a, b) bool.
+
+    ``px``/``py`` are the mapped coordinates (per-row distances to the shared
+    anchors). Identical output to :func:`pairdist_mask` — the filter's L-inf
+    lower bound (slackened by ``ref.prune_delta``; pass ``delta_bound`` for
+    the scale-aware band) only removes pairs whose distance already exceeds
+    ``delta`` — but the Pallas path skips the exact-distance accumulation
+    for tiles where every pair is pruned.
+    """
+    if not supports_prune(metric):
+        raise ValueError(
+            f"pivot filter is unsound for {metric!r} (needs the triangle "
+            f"inequality); prunable kernel metrics: {PRUNABLE_METRICS}"
+        )
+    if delta_bound is None:
+        delta_bound = ref.prune_delta(delta, metric)
+    if resolve_backend(backend, metric, use_kernel) == "numpy":
+        return ref.pairdist_mask_filtered(x, y, px, py, delta, metric, delta_bound)
+    if bm is None:
+        bm = 128 if metric in _pairdist.MXU_METRICS else 16
+    a, b = x.shape[0], y.shape[0]
+    xp, yp = _prep(x, y, metric, bv, bw, bm)
+    bm = min(bm, xp.shape[1])
+    # Pivot coords ride un-normalized (they are distances, not payload);
+    # zero row/column padding is exact for the L-inf max.
+    pxp = _pad_to(_pad_to(px.astype(jnp.float32), bv, 0), _pairdist.BP_CHUNK, 1)
+    pyp = _pad_to(_pad_to(py.astype(jnp.float32), bw, 0), _pairdist.BP_CHUNK, 1)
+    out = _pairdist.pairdist_filtered_blocked(
+        xp, yp, pxp, pyp, metric=metric, delta=float(delta),
+        delta_bound=float(delta_bound), bv=bv, bw=bw, bm=bm,
+        interpret=_interpret(),
+    )
+    # Padded rows/cols can false-positive exactly like pairdist_mask; slice.
+    return out[:a, :b].astype(bool)
+
+
 @functools.partial(
     jax.jit, static_argnames=("metric", "delta", "backend", "use_kernel")
 )

@@ -42,25 +42,9 @@ VPU_METRICS = ("l1", "linf")
 METRICS = MXU_METRICS + VPU_METRICS
 
 
-def _kernel(
-    x_ref,  # (bv, bm) VMEM
-    y_ref,  # (bw, bm) VMEM
-    out_ref,  # (bv, bw) VMEM — f32 distances or int8 mask
-    acc_ref,  # (bv, bw) f32 VMEM scratch, persists across the nm grid axis
-    *,
-    metric: str,
-    delta: float | None,
-    nm: int,
-):
-    im = pl.program_id(2)
-
-    @pl.when(im == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    xc = x_ref[...].astype(jnp.float32)
-    yc = y_ref[...].astype(jnp.float32)
-
+def _accumulate(acc_ref, xc, yc, metric: str) -> None:
+    """One feature chunk's contribution to the (bv, bw) distance accumulator
+    (shared by the plain and the filtered kernel)."""
     if metric == "l2":
         cross = jax.lax.dot_general(
             xc, yc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -83,13 +67,37 @@ def _kernel(
     else:  # pragma: no cover — guarded by ops.py
         raise ValueError(metric)
 
+
+def _finalize(acc, metric: str):
+    if metric == "l2":
+        return jnp.sqrt(jnp.maximum(acc, 0.0))
+    if metric == "cosine":
+        return 1.0 - acc
+    return acc
+
+
+def _kernel(
+    x_ref,  # (bv, bm) VMEM
+    y_ref,  # (bw, bm) VMEM
+    out_ref,  # (bv, bw) VMEM — f32 distances or int8 mask
+    acc_ref,  # (bv, bw) f32 VMEM scratch, persists across the nm grid axis
+    *,
+    metric: str,
+    delta: float | None,
+    nm: int,
+):
+    im = pl.program_id(2)
+
+    @pl.when(im == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate(acc_ref, x_ref[...].astype(jnp.float32),
+                y_ref[...].astype(jnp.float32), metric)
+
     @pl.when(im == nm - 1)
     def _epilogue():
-        acc = acc_ref[...]
-        if metric == "l2":
-            acc = jnp.sqrt(jnp.maximum(acc, 0.0))
-        elif metric == "cosine":
-            acc = 1.0 - acc
+        acc = _finalize(acc_ref[...], metric)
         if delta is None:
             out_ref[...] = acc
         else:
@@ -135,3 +143,126 @@ def pairdist_blocked(
         scratch_shapes=[pltpu.VMEM((bv, bw), jnp.float32)],
         interpret=interpret,
     )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Fused pivot-filter + pairdist (the verify engine's prune="pivot" hot path)
+# ---------------------------------------------------------------------------
+
+# Pivot-coordinate chunk for the bound broadcast: the (bv, bw, BP_CHUNK)
+# intermediate stays ~1 MiB in VMEM (same budget reasoning as the VPU bm=16).
+BP_CHUNK = 16
+
+
+def _filtered_kernel(
+    x_ref,  # (bv, bm) VMEM — payload feature chunk
+    y_ref,  # (bw, bm) VMEM
+    px_ref,  # (bv, bp) VMEM — FULL mapped coordinates (anchor distances)
+    py_ref,  # (bw, bp) VMEM
+    out_ref,  # (bv, bw) int8 mask
+    acc_ref,  # (bv, bw) f32 scratch — distance accumulator
+    bound_ref,  # (bv, bw) f32 scratch — L-inf pivot lower bound
+    *,
+    metric: str,
+    delta: float,
+    delta_bound: float,
+    nm: int,
+    bp: int,
+):
+    im = pl.program_id(2)
+
+    @pl.when(im == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # The pivot axis is NOT chunked by the grid (bp is small — n_dims
+        # padded); the bound is computed once per (i, j) tile, in BP_CHUNK
+        # slices so the 3-d broadcast stays within the VMEM budget.
+        pxc = px_ref[...].astype(jnp.float32)
+        pyc = py_ref[...].astype(jnp.float32)
+        bound = jnp.zeros_like(bound_ref)
+        for c in range(0, bp, BP_CHUNK):
+            bound = jnp.maximum(
+                bound,
+                jnp.abs(
+                    pxc[:, None, c : c + BP_CHUNK] - pyc[None, :, c : c + BP_CHUNK]
+                ).max(-1),
+            )
+        bound_ref[...] = bound
+
+    # Whole-tile skip: when the lower bound already exceeds delta for EVERY
+    # pair in this (bv, bw) tile, the exact-distance accumulation (the MXU /
+    # VPU hot loop) is skipped outright — this is where pruning buys compute,
+    # not just a masked epilogue. acc stays at its zero init; the epilogue's
+    # bound conjunct forces the mask to all-False regardless.
+    @pl.when((bound_ref[...] <= delta_bound).any())
+    def _live():
+        _accumulate(acc_ref, x_ref[...].astype(jnp.float32),
+                    y_ref[...].astype(jnp.float32), metric)
+
+    @pl.when(im == nm - 1)
+    def _epilogue():
+        acc = _finalize(acc_ref[...], metric)
+        out_ref[...] = ((acc <= delta) & (bound_ref[...] <= delta_bound)).astype(
+            out_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "delta", "delta_bound", "bv", "bw", "bm", "interpret"),
+)
+def pairdist_filtered_blocked(
+    x: jnp.ndarray,  # (a, m) — a, m already padded to block multiples
+    y: jnp.ndarray,  # (b, m)
+    px: jnp.ndarray,  # (a, bp) — mapped coords, bp padded to a BP_CHUNK multiple
+    py: jnp.ndarray,  # (b, bp)
+    *,
+    metric: str,
+    delta: float,
+    delta_bound: float,
+    bv: int = 128,
+    bw: int = 128,
+    bm: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw blocked fused filter+pairdist call. Use ``ops.pairdist_mask_filtered``
+    which handles padding, normalization and backend dispatch.
+
+    Semantics (validated against ``ref.pairdist_mask_filtered``): int8 mask,
+    1 where D(x_i, y_j) <= delta AND max_p |px_i[p] - py_j[p]| <= delta_bound.
+    Zero padding is exact on both the feature and the pivot axis (|0-0| = 0
+    contributes nothing to sum or max).
+    """
+    a, m = x.shape
+    b, _ = y.shape
+    bp = px.shape[1]
+    if bm is None:
+        bm = 128 if metric in MXU_METRICS else 16
+    bm = min(bm, m)
+    assert a % bv == 0 and b % bw == 0 and m % bm == 0, (x.shape, y.shape, bv, bw, bm)
+    assert px.shape == (a, bp) and py.shape == (b, bp) and bp % BP_CHUNK == 0, (
+        px.shape, py.shape, BP_CHUNK,
+    )
+    nm = m // bm
+
+    grid = (a // bv, b // bw, nm)
+    return pl.pallas_call(
+        functools.partial(
+            _filtered_kernel, metric=metric, delta=delta,
+            delta_bound=delta_bound, nm=nm, bp=bp,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, bm), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bw, bm), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bv, bp), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bw, bp), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bv, bw), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.int8),
+        scratch_shapes=[
+            pltpu.VMEM((bv, bw), jnp.float32),
+            pltpu.VMEM((bv, bw), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y, px, py)

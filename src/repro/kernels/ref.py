@@ -40,6 +40,99 @@ def pairdist_mask(x: Array, y: Array, delta: float, metric: str = "l2") -> Array
     return pairdist(x, y, metric) <= delta
 
 
+_EPS32 = float(jnp.finfo(jnp.float32).eps)
+
+
+def prune_delta(
+    delta: float, metric: str = "l1", x_abs: float = 0.0, n_feat: int = 0
+) -> float:
+    """The pivot filter's fp guard band — the threshold the L-inf lower
+    bound is pruned against.
+
+    Mathematically the bound over mapped coordinates never exceeds the true
+    distance (each coordinate is 1-Lipschitz), but both sides are computed
+    in fp32, and the DISTANCE side is the worse-conditioned one: l2's
+    MXU-friendly dot-expansion ``sqrt(|x|^2 + |y|^2 - 2xy)`` carries an
+    absolute error ~ X^2·eps/delta near the threshold (X = coordinate
+    magnitude), and l1/linf accumulate ~ m·X·eps — so a pair whose computed
+    distance is <= delta can see a (well-conditioned) computed bound above
+    delta when the data sits far from the origin. Pruning against a
+    SCALE-AWARE slackened threshold restores fp soundness: callers pass
+    ``x_abs`` (max |payload coordinate|) and ``n_feat`` (payload dims), and
+    the slack covers the worst-case rounding of the distance path, the
+    bound path (coordinates are distances, <= the m·X-ish diameter), and
+    the threshold compare. This is what the byte-identity invariant
+    (prune="pivot" == prune="none") relies on; the slack only admits extra
+    candidates for exact evaluation, it never changes emitted pairs.
+
+    With the scale left at 0 (unknown), only the fixed band remains —
+    sound for data of modest magnitude (|x| up to ~1e2 at delta ~1e-2+),
+    which is why every internal caller threads the real scale through.
+    """
+    d = float(delta)
+    x = float(x_abs)
+    m = float(max(n_feat, 1))
+    if metric == "l2":
+        # dot-expansion: |d̂² − d²| ≲ c·m·eps·X² (each of the ~2m+4 terms
+        # rounds at ulp(X²)). Through the sqrt the worst DISTANCE violation
+        # is sqrt of that (when d̂² collapses toward 0) plus the first-order
+        # term near the threshold; the coordinates are l2 distances with the
+        # same error profile, hence the 3x on the sqrt term (x-side, y-side,
+        # bound-side). Empirically ~2x above the measured worst case.
+        e2 = 8.0 * m * _EPS32
+        slack = 3.0 * (e2 ** 0.5) * x + e2 * x * x / (2.0 * max(d, _EPS32))
+    elif metric in ("l1", "linf"):
+        # Same-sign close subtractions are exact (Sterbenz); what is left is
+        # accumulation rounding of the coordinate distances themselves,
+        # whose magnitudes reach the ~m·X diameter — hence m²·X·eps.
+        slack = 4.0 * m * (m + 1.0) * _EPS32 * x
+    else:
+        # Bounded-output metrics (angular, jaccard_minhash, cosine): the
+        # distance and the coordinates live in [0, 1]-ish ranges.
+        slack = 16.0 * _EPS32
+    return d * (1.0 + 1e-4) + 1e-6 + slack
+
+
+def bound_mask(
+    px: Array, py: Array, delta: float, delta_bound: float | None = None
+) -> Array:
+    """Pivot-filter survivor mask: (a, b) bool over mapped coordinates.
+
+    ``px``/``py`` are per-object distances to the shared anchors (the space
+    mapping's output). True where the L-inf lower bound
+    max_p |px_i[p] - py_j[p]| is within the slackened threshold — i.e. the
+    pair CANNOT be pruned and must be exactly evaluated. ``delta_bound``
+    overrides the (scale-free) default band; every engine/executor path
+    threads a single scale-aware value through all of its sub-masks so the
+    pre-pass, the fused kernel and the telemetry always agree.
+    """
+    if delta_bound is None:
+        delta_bound = prune_delta(delta)
+    return pairdist(px, py, "linf") <= delta_bound
+
+
+def pairdist_mask_filtered(
+    x: Array,
+    y: Array,
+    px: Array,
+    py: Array,
+    delta: float,
+    metric: str = "l2",
+    delta_bound: float | None = None,
+) -> Array:
+    """Fused pivot-filter + thresholded join mask (a, b) bool.
+
+    Semantically ``pairdist_mask(x, y, delta, metric) & bound_mask(px, py,
+    delta, delta_bound)``; because the bound is a true lower bound (triangle
+    inequality over the anchors, plus the fp guard band of
+    :func:`prune_delta`), the result is IDENTICAL to the unfiltered mask —
+    the filter only removes pairs whose distance already exceeds delta.
+    Oracle for the fused Pallas kernel, which additionally skips the
+    exact-distance work for fully pruned tiles.
+    """
+    return pairdist_mask(x, y, delta, metric) & bound_mask(px, py, delta, delta_bound)
+
+
 def pairdist_count(x: Array, y: Array, delta: float, metric: str = "l2") -> Array:
     """Per-row join fan-out: (a,) int32 — |{j : D(x_i, y_j) <= delta}|."""
     return pairdist_mask(x, y, delta, metric).sum(-1).astype(jnp.int32)

@@ -1,0 +1,353 @@
+"""Pivot-filter pruning: soundness (no true pair is ever pruned), fixed-seed
+byte-identity of prune="pivot" vs prune="none" on both executors, capability
+fallbacks, and the fused filter+pairdist kernel's parity with its oracle."""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model, distances, spjoin, verify
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+# Metrics for which the filter must be SOUND (true metrics — the triangle
+# inequality holds, so the L-inf bound over anchor distances never exceeds
+# the true distance).
+TRUE_METRICS = ["l1", "l2", "linf", "angular", "jaccard_minhash"]
+
+
+def _dataset(metric, rng, n=120):
+    if metric == "jaccard_minhash":
+        data = rng.integers(0, 20, size=(n, 32)).astype(np.float32)
+    else:
+        data = np.concatenate(
+            [rng.normal(loc=c, scale=1.0, size=(n // 3, 6)) for c in (0.0, 4.0, 9.0)]
+        ).astype(np.float32)
+    d = np.asarray(distances.pairwise(jnp.asarray(data), jnp.asarray(data), metric))
+    delta = float(np.quantile(d[np.triu_indices(len(data), 1)], 0.05))
+    return data, delta
+
+
+# ---------------------------------------------------------------------------
+# Soundness: the bound is a lower bound, so no true pair survives pruning
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), metric=st.sampled_from(TRUE_METRICS))
+def test_no_true_pair_is_ever_pruned(seed, metric):
+    """THE soundness property: for every pair within delta, the L-inf lower
+    bound over mapped coordinates stays within the (fp-slackened) prune
+    threshold — pruning can only ever discard non-hits."""
+    rng = np.random.default_rng(seed)
+    data, delta = _dataset(metric, rng, n=60)
+    anchors = data[rng.choice(len(data), size=4, replace=False)]
+    coords = np.asarray(
+        distances.pairwise(jnp.asarray(data), jnp.asarray(anchors), metric)
+    )
+    d = np.asarray(distances.pairwise(jnp.asarray(data), jnp.asarray(data), metric))
+    bound = np.abs(coords[:, None, :] - coords[None, :, :]).max(-1)
+    true_pairs = d <= delta
+    surviving = bound <= ref.prune_delta(delta)
+    # Every true pair must survive the filter (soundness = completeness here).
+    assert np.all(surviving[true_pairs]), (
+        metric,
+        float(bound[true_pairs & ~surviving].max(initial=0.0)),
+        delta,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    metric=st.sampled_from(TRUE_METRICS),
+    backend=st.sampled_from(["numpy", "pallas"]),
+    tile=st.sampled_from([16, 128]),
+)
+def test_engine_pruned_equals_unpruned(seed, metric, backend, tile):
+    """Engine-level identity under pruning for every true metric, backend and
+    tile size: the emitted pair set never changes."""
+    if backend == "pallas" and not kops.supports_kernel(metric):
+        backend = "numpy"
+    rng = np.random.default_rng(seed)
+    data, delta = _dataset(metric, rng, n=90)
+    anchors = data[rng.choice(len(data), size=3, replace=False)]
+    coords = np.asarray(
+        distances.pairwise(jnp.asarray(data), jnp.asarray(anchors), metric)
+    )
+    cells = rng.integers(0, 4, size=len(data))
+    member = rng.random((len(data), 4)) < 0.6
+    member[np.arange(len(data)), cells] = True
+    base, _ = verify.verify_pairs(
+        data, cells, member, delta, metric,
+        config=verify.EngineConfig(backend=backend, prune="none"),
+    )
+    pruned, stats = verify.verify_pairs(
+        data, cells, member, delta, metric,
+        config=verify.EngineConfig(
+            backend=backend, prune="pivot", tile_v=tile, tile_w=tile
+        ),
+        coords=coords,
+    )
+    assert base.tobytes() == pruned.tobytes(), (metric, backend, tile)
+    assert stats.prune == "pivot"
+    assert stats.n_exact + stats.n_pruned == stats.n_verifications
+    assert stats.n_hits <= stats.n_exact
+
+
+# ---------------------------------------------------------------------------
+# Fixed-seed byte-identity through the reference executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_spjoin_fixed_seed_byte_identity(backend, rng):
+    """Acceptance criterion: spjoin.join pair sets with prune="pivot" are
+    byte-identical to prune="none" at a fixed seed, and pruning actually
+    engages (nonzero rate) on clustered data."""
+    data, delta = _dataset("l1", rng, n=150)
+    cfg = spjoin.JoinConfig(
+        delta=delta, metric="l1", k=64, p=6, n_dims=3, backend=backend,
+        prune="pivot", seed=0,
+    )
+    res_p = spjoin.join(data, cfg)
+    res_n = spjoin.join(data, dataclasses.replace(cfg, prune="none"))
+    assert res_p.pairs.tobytes() == res_n.pairs.tobytes()
+    assert res_p.verify_stats.prune == "pivot"
+    assert res_n.verify_stats.prune == "none"
+    assert res_p.verify_stats.n_pruned > 0
+    assert res_p.verify_stats.prune_rate > 0.0
+    # Pruning is invisible to every result-level quantity.
+    assert res_p.n_verifications == res_n.n_verifications
+    assert np.array_equal(res_p.pairs, spjoin.brute_force_pairs(data, delta, "l1"))
+
+
+def test_spjoin_rs_byte_identity(rng):
+    """Same invariant for the two-set R×S join (coords_w side)."""
+    data, delta = _dataset("l2", rng, n=120)
+    s = (data[::2] + 0.3).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=delta, metric="l2", k=64, p=6, n_dims=3, seed=0)
+    res_p = spjoin.join(data, cfg, s=s)
+    res_n = spjoin.join(data, dataclasses.replace(cfg, prune="none"), s=s)
+    assert res_p.pairs.tobytes() == res_n.pairs.tobytes()
+    assert np.array_equal(
+        res_p.pairs, spjoin.brute_force_pairs(data, delta, "l2", s=s)
+    )
+
+
+@pytest.mark.parametrize("metric,delta,offset", [
+    ("l2", 1.5, 1000.0),   # dot-expansion error >> any fixed band
+    ("l2", 1.5, 10000.0),  # fp32 distances barely meaningful; must stay sound
+    ("l1", 0.05, 1000.0),
+    ("linf", 0.8, 5000.0),
+])
+def test_byte_identity_far_from_origin(metric, delta, offset, rng):
+    """Regression: the guard band must scale with coordinate magnitude.
+    l2's MXU-friendly dot-expansion loses ~ulp(X²) absolute precision, so a
+    fixed slack silently pruned computed hits on data offset ~1000 from the
+    origin. The scale-aware band (ref.prune_delta) keeps pair sets
+    byte-identical at any magnitude — degrading prune_rate toward 0 instead
+    of dropping pairs when fp32 can no longer separate bound from distance."""
+    data = (rng.normal(size=(200, 6)) + offset).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=delta, metric=metric, k=64, p=6, n_dims=3, seed=0)
+    res_p = spjoin.join(data, cfg)
+    res_n = spjoin.join(data, dataclasses.replace(cfg, prune="none"))
+    assert res_p.pairs.tobytes() == res_n.pairs.tobytes(), (metric, offset)
+
+
+# ---------------------------------------------------------------------------
+# Capability fallbacks and caller-bug errors
+# ---------------------------------------------------------------------------
+
+
+def test_pseudo_metric_resolves_to_none(rng):
+    """cosine has no triangle inequality — prune="pivot" silently resolves to
+    "none" (capability, like a missing kernel), never an unsound filter."""
+    data, _ = _dataset("l1", rng, n=60)
+    cfg = spjoin.JoinConfig(delta=0.05, metric="cosine", k=32, p=4, n_dims=3,
+                            prune="pivot", seed=0)
+    res = spjoin.join(data, cfg)
+    assert res.verify_stats.prune == "none"
+    assert res.verify_stats.n_pruned == 0
+    assert verify.resolve_prune("pivot", "cosine", True) == "none"
+    assert verify.resolve_prune("pivot", "l1", True) == "pivot"
+    assert not verify.prune_supported("cosine")
+    assert verify.prune_supported("angular")
+
+
+def test_prune_requires_coords_and_valid_mode(rng):
+    data = rng.normal(size=(30, 4)).astype(np.float32)
+    cells = np.zeros(30, np.int64)
+    member = np.ones((30, 1), bool)
+    with pytest.raises(ValueError, match="coords"):
+        verify.verify_pairs(
+            data, cells, member, 1.0, "l1",
+            config=verify.EngineConfig(prune="pivot"),
+        )
+    with pytest.raises(ValueError, match="prune mode"):
+        verify.verify_pairs(
+            data, cells, member, 1.0, "l1",
+            config=verify.EngineConfig(prune="bogus"),
+        )
+    with pytest.raises(ValueError, match="unsound"):
+        kops.pairdist_mask_filtered(
+            jnp.zeros((4, 3)), jnp.zeros((4, 3)), jnp.zeros((4, 2)),
+            jnp.zeros((4, 2)), 0.5, "cosine",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel parity (both dispatch paths) and the whole-tile skip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("metric", ["l1", "l2", "linf"])
+def test_filtered_kernel_matches_oracle(metric, backend, rng):
+    x = rng.normal(size=(70, 9)).astype(np.float32)
+    y = rng.normal(size=(130, 9)).astype(np.float32)
+    anchors = rng.normal(size=(5, 9)).astype(np.float32)
+    px = np.asarray(distances.pairwise(jnp.asarray(x), jnp.asarray(anchors), metric))
+    py = np.asarray(distances.pairwise(jnp.asarray(y), jnp.asarray(anchors), metric))
+    delta = 3.0
+    want = np.asarray(ref.pairdist_mask_filtered(x, y, px, py, delta, metric))
+    got = np.asarray(
+        kops.pairdist_mask_filtered(x, y, px, py, delta, metric, backend=backend)
+    )
+    assert np.array_equal(want, got), (metric, backend)
+    # The filter never changes the hit set — only the work done to find it.
+    assert np.array_equal(want, np.asarray(ref.pairdist_mask(x, y, delta, metric)))
+
+
+def test_whole_tile_skip_counts(rng):
+    """Two far-apart clumps sharing a cell: cross-clump tiles are fully
+    pruned and skipped outright (no exact dispatch, no occupancy entry)."""
+    a = rng.normal(loc=0.0, size=(40, 4)).astype(np.float32)
+    b = rng.normal(loc=500.0, size=(40, 4)).astype(np.float32)
+    data = np.concatenate([a, b])
+    anchors = data[:3]
+    coords = np.asarray(distances.pairwise(jnp.asarray(data), jnp.asarray(anchors), "l1"))
+    cells = np.zeros(80, np.int64)
+    member = np.ones((80, 1), bool)
+    cfg = verify.EngineConfig(backend="numpy", prune="pivot", tile_v=40, tile_w=40)
+    pruned, stats = verify.verify_pairs(data, cells, member, 2.0, "l1",
+                                        config=cfg, coords=coords)
+    base, _ = verify.verify_pairs(data, cells, member, 2.0, "l1",
+                                  config=dataclasses.replace(cfg, prune="none"))
+    assert pruned.tobytes() == base.tobytes()
+    assert stats.n_tiles_pruned >= 2  # the two cross-clump tiles
+    assert stats.n_dispatched < stats.n_verifications
+    assert 0.0 < stats.occupancy <= 1.0
+
+
+def test_survival_estimate_and_pruning_aware_count(rng):
+    data, delta = _dataset("l1", rng, n=90)
+    anchors = data[:4]
+    coords = np.asarray(distances.pairwise(jnp.asarray(data), jnp.asarray(anchors), "l1"))
+    s = cost_model.estimate_survival_rate(coords, delta)
+    assert 0.0 <= s <= 1.0
+    # survival=1 keeps the paper quantity; smaller survival scales it down.
+    v = np.array([10, 20]); w = np.array([30, 40])
+    assert cost_model.verification_count(v, w) == 10 * 30 + 20 * 40
+    assert cost_model.verification_count(v, w, survival=0.5) == (10 * 30 + 20 * 40) / 2
+    # Degenerate inputs.
+    assert cost_model.estimate_survival_rate(coords[:1], delta) == 1.0
+    # Candidate-restricted form stays a valid fraction.
+    cells = rng.integers(0, 3, size=90)
+    member = rng.random((90, 3)) < 0.5
+    s2 = cost_model.estimate_survival_rate(coords, delta, cells=cells, member=member)
+    assert 0.0 <= s2 <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Distributed executor byte-identity (8 simulated devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run_sub(code: str) -> dict:
+    prog = (
+        "import os\n"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n"
+        + textwrap.dedent(code)
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_distributed_fixed_seed_byte_identity():
+    """Acceptance criterion, distributed half: prune="pivot" pair sets are
+    byte-identical to prune="none" across the shard_map pipeline (the pivot
+    columns riding the all_to_all change no emitted pair), with a nonzero
+    pruning rate and unchanged dispatch/verification telemetry."""
+    res = _run_sub("""
+    import json, numpy as np, jax, jax.numpy as jnp
+    mesh = jax.make_mesh((8,), ("data",))
+    from repro.core import distributed, spjoin
+    rng = np.random.default_rng(0)
+    data = np.concatenate([
+        rng.normal(loc=c, scale=1.0, size=(150, 8)) for c in (0., 5., 10., 15.)
+    ]).astype(np.float32)
+    kw = dict(mesh=mesh, delta=3.0, metric="l1", k=128, p=16, n_dims=4,
+              emit_pairs=True, seed=0)
+    rp = distributed.distributed_join(jnp.asarray(data), prune="pivot", **kw)
+    rn = distributed.distributed_join(jnp.asarray(data), prune="none", **kw)
+    truth = spjoin.brute_force_pairs(data, 3.0, "l1")
+    print(json.dumps(dict(
+        identical=bool(rp.pairs.tobytes() == rn.pairs.tobytes()),
+        exact=bool(np.array_equal(rp.pairs, truth)),
+        hits_match=bool(rp.n_hits == rn.n_hits),
+        verif_match=bool(rp.n_verifications == rn.n_verifications),
+        pruning_rate=float(rp.pruning_rate),
+        pruning_rate_off=float(rn.pruning_rate),
+        predicted_survival=float(rp.predicted_survival),
+        prune_modes=[rp.prune, rn.prune])))
+    """)
+    assert res["identical"] and res["exact"], res
+    assert res["hits_match"] and res["verif_match"], res
+    assert res["pruning_rate"] > 0.0, res
+    assert res["pruning_rate_off"] == 0.0, res
+    assert 0.0 <= res["predicted_survival"] <= 1.0
+    assert res["prune_modes"] == ["pivot", "none"]
+
+
+@pytest.mark.slow
+def test_distributed_rs_byte_identity():
+    """R×S half: pivot coords ride BOTH dispatch all_to_alls (R's V buffers
+    and S's W buffers); pair sets stay byte-identical."""
+    res = _run_sub("""
+    import json, numpy as np, jax, jax.numpy as jnp
+    mesh = jax.make_mesh((8,), ("data",))
+    from repro.core import distributed, spjoin
+    rng = np.random.default_rng(1)
+    r = np.concatenate([
+        rng.normal(loc=c, scale=1.0, size=(60, 8)) for c in (0., 6., 12.)
+    ]).astype(np.float32)
+    s = np.concatenate([
+        rng.normal(loc=c + 0.5, scale=1.0, size=(120, 8)) for c in (0., 6., 12.)
+    ]).astype(np.float32)
+    kw = dict(mesh=mesh, delta=3.0, metric="l1", k=128, p=16, n_dims=4,
+              emit_pairs=True, seed=0)
+    rp = distributed.distributed_join(jnp.asarray(r), s=jnp.asarray(s), prune="pivot", **kw)
+    rn = distributed.distributed_join(jnp.asarray(r), s=jnp.asarray(s), prune="none", **kw)
+    truth = spjoin.brute_force_pairs(r, 3.0, "l1", s=s)
+    print(json.dumps(dict(
+        identical=bool(rp.pairs.tobytes() == rn.pairs.tobytes()),
+        exact=bool(np.array_equal(rp.pairs, truth)),
+        pruning_rate=float(rp.pruning_rate))))
+    """)
+    assert res["identical"] and res["exact"], res
+    assert res["pruning_rate"] > 0.0, res
