@@ -1,6 +1,6 @@
 """Hillclimb H3 (§Perf): the distributed SP-Join pipeline + the verify engine.
 
-Sections (``--rs`` adds a third):
+Sections (``--rs`` adds a fourth):
 
 1. distributed — per-arm wall time of the 8-device shard_map pipeline
    (real wall clock; base / tighten / p-sweep / noprune arms), run in a
@@ -14,15 +14,22 @@ Sections (``--rs`` adds a third):
    speedups, tile/bucket counts, padding occupancy, pruning rate and
    exact-evaluation counts; asserts prune="pivot" pairs are byte-identical
    to prune="none". Acceptance floor: engine >= 2x at N >= 20k on CPU.
-3. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
+3. map-phase — the fused single-pass map kernel (``kernels.ops.map_assign``:
+   space map + kernel assign + packed membership) vs the legacy two-broadcast
+   jnp path, on BOTH executors (reference: in-process; distributed: the
+   8-device counting stage with ``fused=`` toggled). Reports ``map_ms`` /
+   ``map_ms_legacy`` wall times, the modeled HBM-intermediate saving
+   ``map_bytes_saved`` (2·N·p·n + N·p bool bytes avoided minus the N·⌈p/32⌉
+   packed words written) and asserts outputs are byte-identical.
+4. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
    (the skew-sensitive case), exactness-checked in-subprocess against the
    brute-force cross oracle; reports wall time, W capacity, the S-side
    duplication metric Σ|W_h|/|S| and the pruning rate.
 
 Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
 smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke --rs``
-must run to completion, write it, and report a NONZERO pruning rate). Schema
-of the JSON: docs/BENCHMARKS.md.
+must run to completion, write it, report a NONZERO pruning rate and a
+byte-identical map-phase section). Schema of the JSON: docs/BENCHMARKS.md.
 
 Run:
     PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke] [--rs]
@@ -105,6 +112,49 @@ print(json.dumps(dict(
 """
 
 
+_SUB_MAP = """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import json, time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import distributed
+from repro.data import synthetic
+
+mesh = jax.make_mesh((8,), ("data",))
+data = synthetic.mixture({n}, 12, n_clusters=6, skew=0.5, seed=0)
+sharding = NamedSharding(mesh, P("data"))
+x, valid, ids, _ = distributed._pad_shard_set(jnp.asarray(data), 8, sharding)
+
+# One shared plan (sampling + control plane) — the map pass is what differs.
+stats_fn = distributed.make_stage_stats(mesh, "data")
+packets, confs, counts = jax.tree.map(np.asarray, stats_fn(x, valid))
+kg, ka = jax.random.split(jax.random.PRNGKey(0))
+c_min = float(np.clip(np.clip(confs / max(confs.max(), 1e-6), 1e-3, 1.0).min(), 0.05, 1.0))
+pivots, _ = distributed.gibbs_from_packets(
+    kg, jnp.asarray(packets), jnp.asarray(confs), jnp.asarray(counts), 256,
+    int(np.ceil(256 / c_min * 1.5)) + 8)
+plan = distributed.build_join_plan(
+    ka, pivots, delta={delta}, metric="l1", p=16, n_dims=6, seed=0)
+
+out, baseline = {{}}, None
+for label, fused in (("legacy", False), ("fused", True)):
+    fn = distributed.make_stage_counts(mesh, "data", plan, backend="numpy", fused=fused)
+    walls = []
+    for rep in range(3):  # rep 0 warms the compile cache
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(fn(x, valid))
+        walls.append(time.perf_counter() - t0)
+    arrs = [np.asarray(a) for a in res]
+    if baseline is None:
+        baseline = arrs
+    out[label] = dict(
+        map_ms=min(walls[1:]) * 1e3,
+        identical=all(a.tobytes() == b.tobytes() for a, b in zip(arrs, baseline)),
+    )
+print(json.dumps(out))
+"""
+
+
 def _run_sub(prog: str):
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = {"PYTHONPATH": os.path.join(root, "src"), "PATH": "/usr/bin:/bin",
@@ -126,6 +176,84 @@ def run_rs(n_r: int, n_s: int, delta: float) -> dict:
 
 def run_distributed(n: int, delta: float, arms) -> list[dict]:
     return _run_sub(_SUB.format(n=n, delta=delta, arms=repr(arms)))
+
+
+def _map_bytes_saved(n: int, p: int, nd: int) -> int:
+    """Modeled HBM-intermediate bytes the fused map pass avoids per shard:
+    two (N, p, n) bool containment broadcasts + the (N, p) bool mask of the
+    legacy path, minus the (N, ⌈p/32⌉) uint32 packed mask it writes instead
+    (the (N, n) f32 coordinates are written by both paths)."""
+    words = -(-p // 32)
+    return 2 * n * p * nd + n * p - 4 * n * words
+
+
+def run_map_phase(n: int, delta: float) -> dict:
+    """Section 3: fused vs legacy map pass, both executors (ref in-process,
+    distributed as the 8-device counting stage in a subprocess)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import partition, spjoin
+    from repro.data import synthetic
+    from repro.kernels import ops as kops
+
+    data = synthetic.mixture(n, 12, n_clusters=6, skew=0.5, seed=0)
+    cfg = spjoin.JoinConfig(delta=delta, metric="l1", k=256, p=16, n_dims=6,
+                            sampler="generative", seed=0)
+    key = jax.random.PRNGKey(cfg.seed)
+    shards = list(jnp.array_split(jnp.asarray(data), 4))
+    allx = jnp.concatenate(shards)
+    k_sample, k_anchor = jax.random.split(key)
+    node_stats = spjoin.fit_node_stats(shards, cfg.t_cells)
+    pivots = spjoin.draw_pivots(k_sample, shards, node_stats, cfg)
+    plan, smap = spjoin.build_plan(k_anchor, pivots, cfg)
+
+    def legacy():
+        xm = smap(allx)
+        cells = partition.assign_kernel(plan, xm)
+        member = partition.whole_membership(plan, xm)
+        return jax.block_until_ready((xm, cells, member))
+
+    def fused():
+        xm, cells, bits = kops.map_assign(
+            allx, smap.anchors, plan.kernel_lo, plan.kernel_hi,
+            plan.whole_lo, plan.whole_hi, cfg.metric, backend="numpy",
+        )
+        member = kops.unpack_membership(bits, plan.p)
+        return jax.block_until_ready((xm, cells, member))
+
+    results = {}
+    for label, fn in (("legacy", legacy), ("fused", fused)):
+        walls, out = [], None
+        for _ in range(3):  # rep 0 warms compile/dispatch caches
+            t0 = time.perf_counter()
+            out = fn()
+            walls.append(time.perf_counter() - t0)
+        results[label] = (min(walls[1:]) * 1e3, out)
+    t_leg, (_, cells_l, member_l) = results["legacy"]
+    t_fus, (_, cells_f, member_f) = results["fused"]
+    identical = (
+        np.asarray(cells_l).tobytes() == np.asarray(cells_f).tobytes()
+        and np.asarray(member_l).tobytes() == np.asarray(member_f).tobytes()
+    )
+    reference = dict(
+        executor="reference", n=n, p=plan.p,
+        map_ms=round(t_fus, 3), map_ms_legacy=round(t_leg, 3),
+        speedup=round(t_leg / max(t_fus, 1e-9), 2),
+        map_bytes_saved=_map_bytes_saved(n, plan.p, plan.n_dims),
+        identical=bool(identical),
+    )
+
+    sub = _run_sub(_SUB_MAP.format(n=n, delta=delta))
+    distributed_row = dict(
+        executor="distributed", n=n, p=16,
+        map_ms=round(sub["fused"]["map_ms"], 3),
+        map_ms_legacy=round(sub["legacy"]["map_ms"], 3),
+        speedup=round(sub["legacy"]["map_ms"] / max(sub["fused"]["map_ms"], 1e-9), 2),
+        map_bytes_saved=_map_bytes_saved(n, 16, 6),
+        identical=bool(sub["fused"]["identical"] and sub["legacy"]["identical"]),
+    )
+    return dict(n=n, reference=reference, distributed=distributed_row)
 
 
 def run_verify_engine(n: int, delta: float) -> dict:
@@ -243,7 +371,18 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
              engine["occupancy"])
     csv2.close()
 
-    report = dict(smoke=smoke, distributed=rows, verify_engine=engine)
+    map_phase = run_map_phase(n, delta)
+    csv_map = Csv("bench_h3_map.csv",
+                  ["executor", "n", "p", "map_ms", "map_ms_legacy", "speedup",
+                   "map_bytes_saved", "identical"])
+    for row in (map_phase["reference"], map_phase["distributed"]):
+        csv_map.row(row["executor"], row["n"], row["p"], row["map_ms"],
+                    row["map_ms_legacy"], row["speedup"],
+                    row["map_bytes_saved"], row["identical"])
+    csv_map.close()
+
+    report = dict(smoke=smoke, distributed=rows, verify_engine=engine,
+                  map_phase=map_phase)
 
     if rs:
         # Asymmetric two-set arm: |R| = n/5 against |S| = n, exactness-checked

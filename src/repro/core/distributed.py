@@ -27,9 +27,12 @@ The paper's three phases map onto three jitted ``shard_map`` stages over the
                  between predicted and exact capacity is precisely the
                  sampling-quality metric the paper optimizes.
 
-  stage_verify   map + reduce phases: space-map (Pallas pairdist vs anchors),
-                 kernel-cell assignment, whole membership, capacity-bounded
-                 dispatch buffers, ONE ``all_to_all`` over the data axis
+  stage_verify   map + reduce phases: the fused map kernel (one streamed
+                 Pallas pass: anchor distances + kernel-cell assignment +
+                 packed whole membership — ``kernels.ops.map_assign``;
+                 ``map_fused=False`` keeps the legacy two-broadcast path),
+                 capacity-bounded dispatch buffers, ONE ``all_to_all`` over
+                 the data axis
                  (the shuffle — with ``prune="pivot"`` the mapped
                  coordinates ride it as trailing payload columns), then
                  per-local-cell blocked verification (pivot-filter L∞
@@ -218,19 +221,33 @@ def build_join_plan(
     )
 
 
-def _map_assign(plan: JoinPlan, x: Array, valid: Array, backend: str):
+def _map_assign(plan: JoinPlan, x: Array, valid: Array, backend: str, fused: bool = True):
     """Space-map a shard and compute kernel cell + whole membership.
+
+    ``fused=True`` (default) runs the single-pass ``kernels.ops.map_assign``
+    op — anchor distances, cell id and the packed membership bitmask in one
+    streamed kernel, no (n_loc, p, n) / (n_loc, p) HBM intermediates on the
+    Pallas path. ``fused=False`` keeps the historical two-broadcast jnp path
+    (the parity control — byte-identical outputs on fixed seeds).
 
     Also returns the mapped coordinates ``xm`` so callers that need them
     (the counting stage's MBB pass) don't recompute the pairdist."""
-    xm = kops.pairdist(x, plan.anchors, plan.metric, backend=backend)  # (n_loc, n)
-    inside_k = (xm[:, None, :] >= plan.kernel_lo[None]) & (
-        xm[:, None, :] < plan.kernel_hi[None]
-    )
-    cells = jnp.argmax(inside_k.all(-1), axis=1).astype(jnp.int32)
-    member = (
-        (xm[:, None, :] >= plan.whole_lo[None]) & (xm[:, None, :] <= plan.whole_hi[None])
-    ).all(-1)
+    if fused:
+        xm, cells, bits = kops.map_assign(
+            x, plan.anchors, plan.kernel_lo, plan.kernel_hi,
+            plan.whole_lo, plan.whole_hi, plan.metric, backend=backend,
+        )
+        member = kops.unpack_membership(bits, plan.p)
+    else:
+        xm = kops.pairdist(x, plan.anchors, plan.metric, backend=backend)  # (n_loc, n)
+        inside_k = (xm[:, None, :] >= plan.kernel_lo[None]) & (
+            xm[:, None, :] < plan.kernel_hi[None]
+        )
+        cells = jnp.argmax(inside_k.all(-1), axis=1).astype(jnp.int32)
+        member = (
+            (xm[:, None, :] >= plan.whole_lo[None])
+            & (xm[:, None, :] <= plan.whole_hi[None])
+        ).all(-1)
     v = valid.astype(bool)
     return cells, member & v[:, None], v, xm
 
@@ -246,6 +263,7 @@ def make_stage_counts(
     plan: JoinPlan,
     backend: str = "auto",
     use_kernel: bool | None = None,
+    fused: bool = True,
 ):
     """Returns jitted fn: (data, valid) ->
     (v_counts (M, p), w_counts (M, p), cell_lo (M, p, n), cell_hi (M, p, n)).
@@ -254,12 +272,16 @@ def make_stage_counts(
     min/max): the host shrinks each WHOLE box to the δ-expanded MBB of the
     cell's actual members (§Perf H3-it1 — the paper's tighten trick applied
     distributed; Lemma 4 is preserved because every member stays inside its
-    own cell's MBB)."""
+    own cell's MBB).
+
+    ``fused``: route the map pass through the single-pass
+    ``kernels.ops.map_assign`` kernel (default) or the legacy two-broadcast
+    jnp path (the benchmark/parity control)."""
     big = jnp.float32(partition.BIG)
     backend = kops.resolve_backend(backend, plan.metric, use_kernel)
 
     def per_shard(x: Array, valid: Array):
-        cells, member, v, xm = _map_assign(plan, x, valid, backend)
+        cells, member, v, xm = _map_assign(plan, x, valid, backend, fused)
         v_cnt = jnp.zeros((plan.p,), jnp.int32).at[cells].add(v.astype(jnp.int32))
         w_cnt = member.sum(0).astype(jnp.int32)
         safe_cells = jnp.where(v, cells, plan.p)  # invalid -> dropped
@@ -343,6 +365,8 @@ class VerifyConfig:
     prune: str = "none"  # pivot-filter pruning: "none" | "pivot"
     delta_bound: float | None = None  # scale-aware fp band for the filter
     #   (verify.prune_band; None -> the scale-free ref.prune_delta default)
+    map_fused: bool = True  # single-pass map kernel (False: legacy two-pass
+    #   jnp broadcasts — the parity/benchmark control, byte-identical output)
 
 
 def make_stage_verify(
@@ -376,6 +400,7 @@ def make_stage_verify(
     assert p % M == 0, f"p={p} must be a multiple of mesh axis {axis}={M}"
     p_loc = p // M
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
+    map_fused = vcfg.map_fused
     backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
     prune = verify_lib.resolve_prune(vcfg.prune, plan.metric, True)
     n_dims = plan.anchors.shape[0]
@@ -487,8 +512,8 @@ def make_stage_verify(
     if cross:
         def per_shard(xr: Array, valid_r: Array, ids_r: Array,
                       xs: Array, valid_s: Array, ids_s: Array):
-            cells_r, _, v_r, xm_r = _map_assign(plan, xr, valid_r, backend)
-            cells_s, member_s, _, xm_s = _map_assign(plan, xs, valid_s, backend)
+            cells_r, _, v_r, xm_r = _map_assign(plan, xr, valid_r, backend, map_fused)
+            cells_s, member_s, _, xm_s = _map_assign(plan, xs, valid_s, backend, map_fused)
             v_buf, v_ids, v_own, overflow_v = v_dispatch(
                 payload(xr, xm_r), ids_r, cells_r, v_r
             )
@@ -502,7 +527,7 @@ def make_stage_verify(
         in_specs = (P(axis),) * 6
     else:
         def per_shard(x: Array, valid: Array, ids: Array):
-            cells, member, v, xm = _map_assign(plan, x, valid, backend)
+            cells, member, v, xm = _map_assign(plan, x, valid, backend, map_fused)
             rows = payload(x, xm)
             v_buf, v_ids, v_own, overflow_v = v_dispatch(rows, ids, cells, v)
             w_buf, w_ids, w_own, overflow_w = w_dispatch(rows, ids, cells, member)
@@ -602,6 +627,7 @@ def distributed_join(
     capacity_slack: float = 1.0,
     tighten: bool = True,
     prune: str = "pivot",
+    map_fused: bool = True,
     seed: int = 0,
     s: Array | None = None,
 ) -> DistJoinResult:
@@ -635,6 +661,14 @@ def distributed_join(
     payload columns. Results are byte-identical to ``prune="none"`` — the
     bound never eliminates a true hit — and the pruning rate is reported in
     the result. Cosine (no triangle inequality) resolves back to "none".
+
+    ``map_fused``: "pivot"-style toggle for the map phase — True (default)
+    runs the single-pass fused map kernel in the counting and verify stages;
+    False keeps the legacy two-broadcast jnp path. On the numpy backend the
+    two are byte-identical (same XLA expressions); on the Pallas backend the
+    coordinate fp low bits may differ at box edges, which can move an object
+    between adjacent cells without ever changing the emitted pair set (the
+    join is exact under any containment-consistent assignment).
     """
     if not kops.supports_kernel(metric):
         raise ValueError(
@@ -715,7 +749,7 @@ def distributed_join(
     # ---- counting pass + capacity planning ----------------------------------
     # V capacities always come from R's kernel counts; W capacities from the
     # W-side set's whole counts (S when cross, R itself when self).
-    counts_fn = make_stage_counts(mesh, axis, plan, backend)
+    counts_fn = make_stage_counts(mesh, axis, plan, backend, fused=map_fused)
     v_cnt, w_cnt, cell_lo, cell_hi = jax.tree.map(
         np.asarray, counts_fn(data, valid)
     )  # (M, p[, n])
@@ -739,7 +773,7 @@ def distributed_join(
         )
         # W counts changed: one cheap recount against the tightened plan
         # (kernel assignment — the V counts — is unaffected by whole boxes).
-        counts_fn = make_stage_counts(mesh, axis, plan, backend)
+        counts_fn = make_stage_counts(mesh, axis, plan, backend, fused=map_fused)
         if cross:
             _, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(s_arr, valid_s))
         else:
@@ -785,7 +819,7 @@ def distributed_join(
     )
     vcfg = VerifyConfig(
         cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend,
-        prune=prune, delta_bound=delta_bound,
+        prune=prune, delta_bound=delta_bound, map_fused=map_fused,
     )
     # Sample-based pruning forecast (same pivots that sized the capacities):
     # the fraction of CANDIDATE pivot pairs (V×W co-residency) surviving the

@@ -34,9 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
 Array = jnp.ndarray
 
-BIG = 3.0e38  # stand-in for ±inf that stays finite in fp32
+BIG = kref.BIG  # stand-in for ±inf that stays finite in fp32 (one owner)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,7 +238,9 @@ def build_partition(
 # --------------------------------------------------------------------------
 
 
-def assign_kernel(plan: PartitionPlan, x_mapped: Array) -> Array:
+def assign_kernel(
+    plan: PartitionPlan, x_mapped: Array, backend: str | None = None
+) -> Array:
     """KERNEL cell id per object: the unique leaf box containing it.
 
     This defines the V side of the reduce phase: V_h = {o : cell(o) = h} —
@@ -245,14 +250,27 @@ def assign_kernel(plan: PartitionPlan, x_mapped: Array) -> Array:
 
     Boxes are half-open [lo, hi) and tile ℝⁿ, so exactly one matches; argmax
     over the (N, p) containment mask returns it. O(N·p·n) — vectorized.
+
+    ``backend``: None keeps the inline jnp broadcast; "numpy" | "pallas" |
+    "auto" routes through the fused ``kernels.ops.assign_membership`` op
+    (one streamed pass, no (N, p, n) HBM intermediate on the Pallas path —
+    byte-identical cells by construction).
     """
+    if backend is not None:
+        cells, _ = kops.assign_membership(
+            x_mapped, plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi,
+            backend=backend, want="cells",
+        )
+        return cells
     inside = (x_mapped[:, None, :] >= plan.kernel_lo[None]) & (
         x_mapped[:, None, :] < plan.kernel_hi[None]
     )
     return jnp.argmax(inside.all(-1), axis=1).astype(jnp.int32)
 
 
-def whole_membership(plan: PartitionPlan, x_mapped: Array) -> Array:
+def whole_membership(
+    plan: PartitionPlan, x_mapped: Array, backend: str | None = None
+) -> Array:
     """(N, p) bool — WHOLE partition membership (δ-expanded, closed boxes).
 
     This defines the W side of the reduce phase: W_h = {o : o within the
@@ -261,7 +279,17 @@ def whole_membership(plan: PartitionPlan, x_mapped: Array) -> Array:
     δ-neighbour of a V_h row appears in W_h, so verifying V_h × W_h per
     cell is complete. In R×S mode this is evaluated on S's mapped rows
     (W from S) while kernel assignment runs on R (V from R).
+
+    ``backend``: None keeps the inline jnp broadcast; "numpy" | "pallas" |
+    "auto" routes through the fused ``kernels.ops.assign_membership`` op
+    (the (N, ⌈p/32⌉) packed bitmask is unpacked here for API compatibility).
     """
+    if backend is not None:
+        _, bits = kops.assign_membership(
+            x_mapped, plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi,
+            backend=backend, want="member",
+        )
+        return kops.unpack_membership(bits, plan.p)
     inside = (x_mapped[:, None, :] >= plan.whole_lo[None]) & (
         x_mapped[:, None, :] <= plan.whole_hi[None]
     )

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
 from repro.core import verify as verify_lib
+from repro.kernels import ops as kops
 
 Array = jnp.ndarray
 
@@ -55,6 +56,11 @@ class JoinConfig:
     tile_w: int = 4096  # verify engine streaming tile (W side)
     prune: str = "pivot"  # pivot-filter pruning: "pivot" | "none" (sound for
     #   true metrics; cosine resolves back to "none" — see core.verify)
+    map_fused: bool = True  # single-pass map kernel (kernels.ops.map_assign);
+    #   metrics without a kernel fall back to the two-pass path (capability,
+    #   like backend dispatch). False: always the legacy two-pass path.
+    #   On/off is byte-identical on the numpy backend; on Pallas, coordinate
+    #   fp low bits at box edges may differ (pair sets stay exact).
     seed: int = 0
 
     def engine_config(self) -> verify_lib.EngineConfig:
@@ -210,24 +216,54 @@ def join(
     # ---- map phase -------------------------------------------------------
     t0 = time.perf_counter()
     plan, smap = build_plan(k_anchor, pivots, cfg)
-    x_mapped = smap(allx)
-    cells = partition.assign_kernel(plan, x_mapped)
+    # Fused single-pass map kernel (space map + assign + packed membership)
+    # when the metric has one; reference-only metrics (angular,
+    # jaccard_minhash) keep the two-pass jnp path — capability, not error,
+    # exactly like backend dispatch. Outputs are byte-identical either way.
+    fused = cfg.map_fused and kops.supports_kernel(cfg.metric)
+    assign_backend = cfg.backend if fused else None
+    if fused:
+        # Membership is only worth computing in the first pass when the whole
+        # boxes are final (no tighten, self-join) — otherwise request cells
+        # only and pay for exactly one membership sweep below, same total
+        # containment work as the legacy path.
+        want = "both" if (not cfg.tighten and not cross) else "cells"
+        x_mapped, cells, bits = kops.map_assign(
+            allx, smap.anchors, plan.kernel_lo, plan.kernel_hi,
+            plan.whole_lo, plan.whole_hi, cfg.metric, backend=cfg.backend,
+            want=want,
+        )
+    else:
+        x_mapped = smap(allx)
+        cells = partition.assign_kernel(plan, x_mapped)
+        bits = None
     if cfg.tighten:
         # Kernel-cell MBBs come from R only (V rows); Lemma 4 still covers
         # every S partner: it lies within L∞ δ of an R member of the cell.
         plan = partition.tighten(plan, x_mapped, cells)
+    s_mapped = None
     if cross:
-        s_mapped = (
-            smap(s_all) if s_all.shape[0] else jnp.zeros((0, smap.n_dims), jnp.float32)
-        )
-        member = (
-            partition.whole_membership(plan, s_mapped)
-            if s_all.shape[0]
-            else jnp.zeros((0, plan.p), bool)
-        )
+        if s_all.shape[0] == 0:
+            s_mapped = jnp.zeros((0, smap.n_dims), jnp.float32)
+            member = jnp.zeros((0, plan.p), bool)
+        elif fused:
+            # Same fused pass (and fp algorithm) as the R side — a borderline
+            # S coordinate must not land on a different side of a whole-box
+            # edge than R's kernel-computed MBB implies.
+            s_mapped, _, s_bits = kops.map_assign(
+                s_all, smap.anchors, plan.kernel_lo, plan.kernel_hi,
+                plan.whole_lo, plan.whole_hi, cfg.metric, backend=cfg.backend,
+                want="member",
+            )
+            member = kops.unpack_membership(s_bits, plan.p)
+        else:
+            s_mapped = smap(s_all)
+            member = partition.whole_membership(plan, s_mapped)
+    elif fused and not cfg.tighten:
+        # The fused pass already produced membership for the final boxes.
+        member = kops.unpack_membership(bits, plan.p)
     else:
-        s_mapped = None
-        member = partition.whole_membership(plan, x_mapped)
+        member = partition.whole_membership(plan, x_mapped, backend=assign_backend)
     t_map = time.perf_counter() - t0
 
     # ---- reduce phase: streaming tiled verify engine ---------------------

@@ -3,9 +3,17 @@
   pairdist   — blocked all-pairs distance + fused threshold (verify phase,
                space mapping). MXU path for l2/cosine/dot, VPU for l1/linf.
   histogram  — fused per-dimension GoF cell counts (sampling stats phase).
+  mapassign  — fused map phase: space map + kernel-cell assign + packed
+               whole membership in one streamed pass (no (N, p, n) in HBM).
 
 ``ops`` holds the public jit'd wrappers (padding, dispatch, interpret mode on
 non-TPU backends); ``ref`` the pure-jnp oracles the tests sweep against.
 """
 from repro.kernels import ops, ref  # noqa: F401
-from repro.kernels.ops import histogram, pairdist, pairdist_count, pairdist_mask  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    histogram,
+    map_assign,
+    pairdist,
+    pairdist_count,
+    pairdist_mask,
+)

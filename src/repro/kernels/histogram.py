@@ -40,7 +40,7 @@ def _kernel(u_ref, w_ref, out_ref, *, t: int, nn: int):
 
 @functools.partial(jax.jit, static_argnames=("t", "bn", "bmm", "interpret"))
 def histogram_blocked(
-    u: jnp.ndarray,  # (n, m) in [0, 1), n/m padded to block multiples
+    u: jnp.ndarray,  # (n, m) in [0, 1) — ragged shapes padded internally
     weights: jnp.ndarray,  # (n, 1) validity mask (0 for padding rows)
     *,
     t: int,
@@ -48,19 +48,31 @@ def histogram_blocked(
     bmm: int = 8,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """Returns the (m, t) count matrix. Ragged n/m are handled here: padding
+    rows ride the existing weights column with weight 0 (no contribution) and
+    padding dimensions land in extra output rows that are sliced off — so
+    callers never pre-pad."""
     n, m = u.shape
+    if n == 0 or m == 0:
+        return jnp.zeros((m, t), jnp.float32)
     bn = min(bn, n)
     bmm = min(bmm, m)
-    assert n % bn == 0 and m % bmm == 0, (u.shape, bn, bmm)
-    grid = (m // bmm, n // bn)
-    return pl.pallas_call(
-        functools.partial(_kernel, t=t, nn=n // bn),
+    pad_n = (-n) % bn
+    pad_m = (-m) % bmm
+    if pad_n or pad_m:
+        u = jnp.pad(u, ((0, pad_n), (0, pad_m)))
+        weights = jnp.pad(weights, ((0, pad_n), (0, 0)))
+    np_, mp = u.shape
+    grid = (mp // bmm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, t=t, nn=np_ // bn),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, bmm), lambda j, i: (i, j)),
             pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bmm, t), lambda j, i: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, t), jnp.float32),
         interpret=interpret,
     )(u, weights)
+    return out[:m]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.kernels import pairdist as _pairdist
 from repro.kernels import histogram as _histogram
+from repro.kernels import mapassign as _mapassign
 from repro.kernels import ref
 
 Array = jnp.ndarray
@@ -263,10 +264,194 @@ def histogram(
         return ref.histogram(u, t, weights)
     n, m = u.shape
     w = jnp.ones((n, 1), jnp.float32) if weights is None else weights.reshape(n, 1)
-    bn_ = min(bn, max(n, 1))
-    up = _pad_to(_pad_to(u, bn_, 0), bmm, 1)
-    wp = _pad_to(w, bn_, 0)  # padding rows get weight 0 -> no contribution
-    out = _histogram.histogram_blocked(
-        up, wp.astype(jnp.float32), t=t, bn=bn_, bmm=min(bmm, up.shape[1]), interpret=_interpret()
+    # Ragged n/m are padded (and masked via the weights column) by the
+    # blocked kernel itself.
+    return _histogram.histogram_blocked(
+        u, w.astype(jnp.float32), t=t, bn=bn, bmm=bmm, interpret=_interpret()
     )
-    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Fused map phase: space map + kernel assign + packed whole membership
+# ---------------------------------------------------------------------------
+
+_ND_MULT = 8  # mapped-coordinate (anchor) axis padded to this multiple
+_BIG = _mapassign.BIG
+
+
+def _pad_const(x: Array, mult: int, axis: int, value: float) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _prep_boxes(
+    kernel_lo: Array, kernel_hi: Array, whole_lo: Array, whole_hi: Array, bp: int
+):
+    """Pad the (p, n) box edges for the blocked kernel.
+
+    Padded DIMENSIONS get (-BIG, +BIG) edges — any finite coordinate
+    satisfies them, so they never veto containment. Padded PARTITIONS get
+    lo = +BIG — no finite coordinate reaches them, so they never match
+    (neither half-open kernel nor closed whole)."""
+    def dims(lo, hi):
+        return (
+            _pad_const(lo.astype(jnp.float32), _ND_MULT, 1, -_BIG),
+            _pad_const(hi.astype(jnp.float32), _ND_MULT, 1, _BIG),
+        )
+
+    def parts(lo, hi):
+        return _pad_const(lo, bp, 0, _BIG), _pad_const(hi, bp, 0, _BIG)
+
+    klo, khi = parts(*dims(kernel_lo, kernel_hi))
+    wlo, whi = parts(*dims(whole_lo, whole_hi))
+    return klo, khi, wlo, whi
+
+
+def _bp_eff(p: int, bp: int) -> int:
+    """Concrete partition block: a WORD multiple no larger than needed."""
+    if bp % _mapassign.WORD != 0:
+        raise ValueError(f"bp={bp} must be a multiple of {_mapassign.WORD}")
+    p_words = -(-p // _mapassign.WORD) * _mapassign.WORD
+    return min(bp, p_words)
+
+
+WANTS = ("both", "cells", "member")
+
+
+def _want_flags(want: str) -> tuple[bool, bool]:
+    if want not in WANTS:
+        raise ValueError(f"unknown want {want!r}; expected one of {WANTS}")
+    return want != "member", want != "cells"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "bn", "bp", "bm", "backend", "use_kernel", "want"),
+)
+def map_assign(
+    x: Array,
+    anchors: Array,
+    kernel_lo: Array,
+    kernel_hi: Array,
+    whole_lo: Array,
+    whole_hi: Array,
+    metric: str = "l2",
+    *,
+    bn: int = 128,
+    bp: int = 128,
+    bm: int | None = None,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+    want: str = "both",
+) -> tuple[Array, Array, Array]:
+    """Fused map phase over one shard: one streamed pass computes the mapped
+    coordinates ``xm = D(x, anchors)`` (N, n), the kernel cell id (N,) int32
+    and the packed whole-membership bitmask (N, ⌈p/32⌉) uint32 — without the
+    (N, p, n) / (N, p) HBM intermediates of the two-pass jnp path (unpack
+    the bits with :func:`unpack_membership`). Kernel metrics only (callers
+    with reference-only metrics map via ``core.mapping`` and use
+    :func:`assign_membership` / the partition fallback).
+
+    ``want``: "both" | "cells" | "member" — skip a containment side the
+    caller will recompute anyway (e.g. membership against post-``tighten``
+    boxes); the skipped output is zero-filled, never garbage."""
+    n_rows = x.shape[0]
+    n_dims = anchors.shape[0]
+    p = kernel_lo.shape[0]
+    words = -(-p // _mapassign.WORD)
+    want_cells, want_member = _want_flags(want)
+    if resolve_backend(backend, metric, use_kernel) == "numpy":
+        xm = ref.pairdist(x, anchors, metric)
+        cells, bits = _ref_assign(
+            xm, kernel_lo, kernel_hi, whole_lo, whole_hi, want_cells, want_member
+        )
+        return xm, cells, bits
+    if n_rows == 0:  # empty shard: nothing to grid over
+        return (
+            jnp.zeros((0, n_dims), jnp.float32),
+            jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0, words), jnp.uint32),
+        )
+    if bm is None:
+        bm = 128 if metric in _pairdist.MXU_METRICS else 16
+    xp, ap = _prep(x, anchors, metric, bn, _ND_MULT, bm)
+    bm = min(bm, xp.shape[1])
+    bpe = _bp_eff(p, bp)
+    xm, cells, bits = _mapassign.map_assign_blocked(
+        xp, ap, *_prep_boxes(kernel_lo, kernel_hi, whole_lo, whole_hi, bpe),
+        metric=metric, bn=bn, bp=bpe, bm=bm, interpret=_interpret(),
+        want_cells=want_cells, want_member=want_member,
+    )
+    return xm[:n_rows, :n_dims], cells[:n_rows, 0], bits[:n_rows, :words]
+
+
+def _ref_assign(xm, kernel_lo, kernel_hi, whole_lo, whole_hi, want_cells, want_member):
+    """numpy-backend assign with the same zero-fill contract as the kernel."""
+    n_rows = xm.shape[0]
+    words = -(-kernel_lo.shape[0] // _mapassign.WORD)
+    cells = (
+        ref.assign_kernel_cells(xm, kernel_lo, kernel_hi)
+        if want_cells
+        else jnp.zeros((n_rows,), jnp.int32)
+    )
+    bits = (
+        ref.membership_bits(xm, whole_lo, whole_hi)
+        if want_member
+        else jnp.zeros((n_rows, words), jnp.uint32)
+    )
+    return cells, bits
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "bp", "backend", "use_kernel", "want")
+)
+def assign_membership(
+    xm: Array,
+    kernel_lo: Array,
+    kernel_hi: Array,
+    whole_lo: Array,
+    whole_hi: Array,
+    *,
+    bn: int = 128,
+    bp: int = 128,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+    want: str = "both",
+) -> tuple[Array, Array]:
+    """Assign-only variant of :func:`map_assign`: the coordinates ``xm``
+    (N, n) are already mapped (the ``metric=None`` path of the same fused
+    kernel — metric-independent, so every backend request is honored).
+    Returns (cells (N,) int32, bits (N, ⌈p/32⌉) uint32); ``want`` as in
+    :func:`map_assign` (the unwanted output is zero-filled)."""
+    n_rows = xm.shape[0]
+    p = kernel_lo.shape[0]
+    words = -(-p // _mapassign.WORD)
+    want_cells, want_member = _want_flags(want)
+    if resolve_backend(backend, None, use_kernel) == "numpy":
+        return _ref_assign(
+            xm, kernel_lo, kernel_hi, whole_lo, whole_hi, want_cells, want_member
+        )
+    if n_rows == 0:  # empty shard: nothing to grid over
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0, words), jnp.uint32)
+    xp = _pad_to(_pad_to(xm.astype(jnp.float32), bn, 0), _ND_MULT, 1)
+    bpe = _bp_eff(p, bp)
+    # bm = _ND_MULT: the coordinate width is an _ND_MULT multiple (not
+    # necessarily a multiple of the metric-default 16), and metric=None
+    # never chunks over it anyway.
+    _, cells, bits = _mapassign.map_assign_blocked(
+        xp, jnp.zeros((xp.shape[1], xp.shape[1]), jnp.float32),
+        *_prep_boxes(kernel_lo, kernel_hi, whole_lo, whole_hi, bpe),
+        metric=None, bn=bn, bp=bpe, bm=_ND_MULT, interpret=_interpret(),
+        want_cells=want_cells, want_member=want_member,
+    )
+    return cells[:n_rows, 0], bits[:n_rows, :words]
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def unpack_membership(bits: Array, p: int) -> Array:
+    """(N, ⌈p/32⌉) packed words → (N, p) bool whole-membership mask."""
+    return ref.unpack_membership(bits, p)

@@ -138,6 +138,87 @@ def pairdist_count(x: Array, y: Array, delta: float, metric: str = "l2") -> Arra
     return pairdist_mask(x, y, delta, metric).sum(-1).astype(jnp.int32)
 
 
+MEMBER_WORD = 32  # whole-membership bits per packed uint32 word
+BIG = 3.0e38  # finite ±inf stand-in for box edges (fp32-representable);
+#   core.partition aliases this — one owner for the sentinel
+
+
+def pack_membership(member: Array) -> Array:
+    """Pack an (N, p) bool membership mask 32 partitions per uint32 word:
+    (N, ⌈p/32⌉), bit ``j % 32`` of word ``j // 32`` set iff ``member[:, j]``.
+    Trailing pad bits of the last word are 0 (padded partitions are never
+    members). Disjoint-bit sum == bitwise or, so the pack is exact."""
+    n, p = member.shape
+    pad = (-p) % MEMBER_WORD
+    words = (p + pad) // MEMBER_WORD
+    m = jnp.pad(member.astype(jnp.uint32), ((0, 0), (0, pad)))
+    m = m.reshape(n, words, MEMBER_WORD)
+    shift = jnp.arange(MEMBER_WORD, dtype=jnp.uint32)
+    return (m << shift[None, None, :]).sum(-1)
+
+
+def unpack_membership(bits: Array, p: int) -> Array:
+    """Inverse of :func:`pack_membership`: (N, ⌈p/32⌉) uint32 → (N, p) bool."""
+    shift = jnp.arange(MEMBER_WORD, dtype=jnp.uint32)
+    b = (bits[:, :, None] >> shift[None, None, :]) & jnp.uint32(1)
+    n, words = bits.shape
+    return b.reshape(n, words * MEMBER_WORD)[:, :p].astype(bool)
+
+
+def assign_kernel_cells(xm: Array, kernel_lo: Array, kernel_hi: Array) -> Array:
+    """(N,) int32 kernel cell ids — the half-open [lo, hi) containment argmax
+    (exactly one box contains; an all-False row degenerates to cell 0)."""
+    xm = xm.astype(jnp.float32)
+    inside_k = (xm[:, None, :] >= kernel_lo[None]) & (xm[:, None, :] < kernel_hi[None])
+    return jnp.argmax(inside_k.all(-1), axis=1).astype(jnp.int32)
+
+
+def membership_bits(xm: Array, whole_lo: Array, whole_hi: Array) -> Array:
+    """(N, ⌈p/32⌉) uint32 packed whole membership — closed [lo, hi] boxes."""
+    xm = xm.astype(jnp.float32)
+    inside_w = (xm[:, None, :] >= whole_lo[None]) & (xm[:, None, :] <= whole_hi[None])
+    return pack_membership(inside_w.all(-1))
+
+
+def assign_membership(
+    xm: Array,
+    kernel_lo: Array,
+    kernel_hi: Array,
+    whole_lo: Array,
+    whole_hi: Array,
+) -> tuple[Array, Array]:
+    """Kernel cell id + packed whole membership from mapped coordinates.
+
+    The obvious (N, p, n) broadcast form — bit-for-bit the historical jnp
+    map-phase path (``partition.assign_kernel`` / ``whole_membership``):
+    kernel boxes are half-open [lo, hi), whole boxes closed [lo, hi]. Oracle
+    for the fused Pallas kernel in ``mapassign.py``. Returns
+    (cells (N,) int32, bits (N, ⌈p/32⌉) uint32).
+    """
+    return (
+        assign_kernel_cells(xm, kernel_lo, kernel_hi),
+        membership_bits(xm, whole_lo, whole_hi),
+    )
+
+
+def map_assign(
+    x: Array,
+    anchors: Array,
+    kernel_lo: Array,
+    kernel_hi: Array,
+    whole_lo: Array,
+    whole_hi: Array,
+    metric: str = "l2",
+) -> tuple[Array, Array, Array]:
+    """Full map phase: space map + assign + membership, unfused.
+
+    Semantic ground truth for the fused kernel: ``xm = pairdist(x, anchors)``
+    then :func:`assign_membership`. Returns (xm, cells, bits)."""
+    xm = pairdist(x, anchors, metric)
+    cells, bits = assign_membership(xm, kernel_lo, kernel_hi, whole_lo, whole_hi)
+    return xm, cells, bits
+
+
 def histogram(u: Array, t: int, weights: Array | None = None) -> Array:
     """Per-dimension equal-width histogram of u in [0, 1): (n, m) -> (m, t).
 

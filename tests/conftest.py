@@ -13,7 +13,12 @@ import sys
 import numpy as np
 import pytest
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+try:
+    import repro  # noqa: F401  — editable install / PYTHONPATH=src is canonical
+except ModuleNotFoundError:
+    # Hermetic checkout run without `pip install -e .`: fall back to the
+    # src layout declared in pyproject.toml.
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:
     import hypothesis  # noqa: F401

@@ -70,6 +70,21 @@ def test_histogram_matches_ref(n, m, t, rng):
     )
 
 
+@pytest.mark.parametrize("n,m", [(0, 3), (1, 1), (37, 5), (130, 3), (300, 17)])
+def test_histogram_blocked_ragged_shapes(n, m, rng):
+    """Regression: the raw blocked kernel used to hard-assert block-multiple
+    shapes; it now pads internally (rows masked via the weights column,
+    padded dimensions sliced off), so callers never pre-pad."""
+    from repro.kernels.histogram import histogram_blocked
+
+    u = jnp.asarray(rng.uniform(size=(n, m)), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, size=(n, 1)), jnp.float32)
+    got = histogram_blocked(u, w, t=8, interpret=True)
+    want = ref.histogram(u, 8, w[:, 0])
+    assert got.shape == (m, 8)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
 def test_histogram_counts_sum_to_n(rng):
     u = jnp.asarray(rng.uniform(size=(500, 4)), jnp.float32)
     h = np.asarray(ops.histogram(u, 8))

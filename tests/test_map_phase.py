@@ -1,0 +1,310 @@
+"""Parity & regression suite for the fused map-phase kernel (map + assign +
+membership — ``kernels/mapassign.py`` via ``kernels.ops.map_assign``).
+
+The fused op must be a pure optimization: cells / membership / mapped
+coordinates agree across numpy|pallas|auto backends, tile sizes, metrics and
+padded (invalid-row) shards, and fixed-seed end-to-end pair sets are
+byte-identical on both executors with the fused map on and off."""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mapping, partition, spjoin
+from repro.kernels import ops, ref
+
+# Join-level metrics (the 6 of core.distances); the first four have a Pallas
+# kernel — angular / jaccard_minhash exercise the two-pass fallback gate.
+JOIN_METRICS = ("l1", "l2", "linf", "cosine", "angular", "jaccard_minhash")
+
+
+def _plan(rng, metric="l1", k=96, p=11, n=5, m=7, delta=0.8, seed=0):
+    """A partition plan + space map over random pivots (anchor metric falls
+    back to l2 for 'dot', which is a kernel metric but not a join metric)."""
+    anchor_metric = metric if metric in ("l1", "l2", "linf", "cosine") else "l2"
+    pivots = rng.normal(size=(k, m)).astype(np.float32)
+    smap = mapping.select_anchors(
+        jax.random.PRNGKey(seed), jnp.asarray(pivots), n, anchor_metric
+    )
+    mapped = np.asarray(smap(jnp.asarray(pivots)))
+    plan = partition.build_partition(mapped, p, delta, "iterative", seed=seed)
+    return plan, smap
+
+
+def _boxes(plan):
+    return plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi
+
+
+# ---------------------------------------------------------------------------
+# Backend / tile-size / shape parity of the fused op itself
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ops.METRICS)
+def test_map_assign_backends_agree(metric, rng):
+    plan, smap = _plan(rng, metric)
+    x = jnp.asarray(rng.normal(size=(137, 7)), jnp.float32)
+    want_xm, want_cells, want_bits = ref.map_assign(
+        x, smap.anchors, *_boxes(plan), metric
+    )
+    for backend in ("numpy", "pallas", "auto"):
+        xm, cells, bits = ops.map_assign(
+            x, smap.anchors, *_boxes(plan), metric, backend=backend
+        )
+        np.testing.assert_allclose(xm, want_xm, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(cells, want_cells)
+        np.testing.assert_array_equal(bits, want_bits)
+
+
+@pytest.mark.parametrize("bn,bp", [(32, 32), (64, 64), (128, 32), (256, 128)])
+def test_map_assign_tile_size_invariance(bn, bp, rng):
+    """Block sizes are a scheduling choice — results cannot depend on them."""
+    plan, smap = _plan(rng, "l2", p=40)  # p=40: multi-word membership packing
+    x = jnp.asarray(rng.normal(size=(137, 7)), jnp.float32)
+    want = ref.map_assign(x, smap.anchors, *_boxes(plan), "l2")
+    xm, cells, bits = ops.map_assign(
+        x, smap.anchors, *_boxes(plan), "l2", bn=bn, bp=bp, backend="pallas"
+    )
+    np.testing.assert_allclose(xm, want[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(cells, want[1])
+    np.testing.assert_array_equal(bits, want[2])
+
+
+def test_map_assign_bad_block_size(rng):
+    plan, smap = _plan(rng, "l1")
+    x = jnp.asarray(rng.normal(size=(16, 7)), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        ops.map_assign(x, smap.anchors, *_boxes(plan), "l1", bp=48, backend="pallas")
+
+
+def test_map_assign_padded_invalid_rows(rng):
+    """Static-shape shards carry zero-padding rows: the fused kernel must
+    assign the real prefix identically whether or not padding rides along
+    (padded rows get *defined* garbage, masked by validity downstream)."""
+    plan, smap = _plan(rng, "l1")
+    x = rng.normal(size=(100, 7)).astype(np.float32)
+    xp = np.concatenate([x, np.zeros((29, 7), np.float32)])  # padded shard
+    for backend in ("numpy", "pallas"):
+        xm_a, cells_a, bits_a = ops.map_assign(
+            jnp.asarray(x), smap.anchors, *_boxes(plan), "l1", backend=backend
+        )
+        xm_b, cells_b, bits_b = ops.map_assign(
+            jnp.asarray(xp), smap.anchors, *_boxes(plan), "l1", backend=backend
+        )
+        np.testing.assert_allclose(xm_b[:100], xm_a, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(cells_b[:100], cells_a)
+        np.testing.assert_array_equal(bits_b[:100], bits_a)
+
+
+def test_map_assign_empty_shard(rng):
+    plan, smap = _plan(rng, "l1")
+    x = jnp.zeros((0, 7), jnp.float32)
+    for backend in ("numpy", "pallas"):
+        xm, cells, bits = ops.map_assign(
+            x, smap.anchors, *_boxes(plan), "l1", backend=backend
+        )
+        assert xm.shape == (0, 5) and cells.shape == (0,) and bits.shape == (0, 1)
+
+
+def test_map_assign_unsupported_metric_raises(rng):
+    plan, smap = _plan(rng, "angular")
+    x = jnp.asarray(rng.normal(size=(8, 7)), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.map_assign(x, smap.anchors, *_boxes(plan), "angular", backend="pallas")
+
+
+@pytest.mark.parametrize("n_dims", [3, 8, 12, 20])
+def test_assign_membership_odd_anchor_counts(n_dims, rng):
+    """Regression: the assign-only Pallas path used the metric-default
+    feature chunk (16), which does not divide a coordinate width padded to a
+    multiple of 8 only — e.g. 20 anchors pad to 24 and tripped the shape
+    assert."""
+    plan, smap = _plan(rng, "l1", n=n_dims, m=max(n_dims + 2, 7))
+    xm = smap(jnp.asarray(rng.normal(size=(50, max(n_dims + 2, 7))), jnp.float32))
+    want = ref.assign_membership(xm, *_boxes(plan))
+    got = ops.assign_membership(xm, *_boxes(plan), backend="pallas")
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_want_variants_match_both(backend, rng):
+    """want="cells"/"member" skip one containment sweep; the produced side
+    must equal the "both" run and the skipped side must be zero-filled."""
+    plan, smap = _plan(rng, "l2", p=40)
+    x = jnp.asarray(rng.normal(size=(70, 7)), jnp.float32)
+    xm_b, cells_b, bits_b = ops.map_assign(
+        x, smap.anchors, *_boxes(plan), "l2", backend=backend, want="both"
+    )
+    xm_c, cells_c, bits_c = ops.map_assign(
+        x, smap.anchors, *_boxes(plan), "l2", backend=backend, want="cells"
+    )
+    xm_m, cells_m, bits_m = ops.map_assign(
+        x, smap.anchors, *_boxes(plan), "l2", backend=backend, want="member"
+    )
+    np.testing.assert_array_equal(xm_c, xm_b)
+    np.testing.assert_array_equal(xm_m, xm_b)
+    np.testing.assert_array_equal(cells_c, cells_b)
+    np.testing.assert_array_equal(bits_m, bits_b)
+    assert not np.asarray(bits_c).any() and not np.asarray(cells_m).any()
+    with pytest.raises(ValueError, match="unknown want"):
+        ops.map_assign(
+            x, smap.anchors, *_boxes(plan), "l2", backend=backend, want="all"
+        )
+
+
+def test_rs_join_fused_on_off_byte_identical(rng):
+    """Cross-join map phase: fused S-side membership (same kernel as R) must
+    reproduce the legacy path's pair set exactly."""
+    r = rng.normal(size=(120, 5)).astype(np.float32)
+    s = rng.normal(loc=0.5, size=(300, 5)).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=1.5, metric="l1", k=48, p=6, n_dims=3)
+    res_on = spjoin.join(r, cfg, s=s)
+    res_off = spjoin.join(r, dataclasses.replace(cfg, map_fused=False), s=s)
+    assert res_on.pairs.tobytes() == res_off.pairs.tobytes()
+    np.testing.assert_array_equal(
+        res_on.pairs, spjoin.brute_force_pairs(r, 1.5, "l1", s=s)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Membership bit packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 31, 32, 33, 40, 64, 95])
+def test_pack_unpack_membership_roundtrip(p, rng):
+    member = jnp.asarray(rng.integers(0, 2, size=(57, p)).astype(bool))
+    bits = ref.pack_membership(member)
+    assert bits.shape == (57, -(-p // 32)) and bits.dtype == jnp.uint32
+    np.testing.assert_array_equal(ops.unpack_membership(bits, p), member)
+
+
+def test_pack_membership_bit31():
+    """The sign-bit word position must pack exactly (uint32, no overflow)."""
+    member = jnp.zeros((3, 32), bool).at[:, 31].set(True)
+    bits = np.asarray(ref.pack_membership(member))
+    assert (bits[:, 0] == np.uint32(1) << np.uint32(31)).all()
+
+
+# ---------------------------------------------------------------------------
+# partition.assign_kernel / whole_membership backend= path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas", "auto"])
+def test_partition_backend_path_matches_inline(backend, rng):
+    plan, smap = _plan(rng, "l1", p=13)
+    xm = smap(jnp.asarray(rng.normal(size=(200, 7)), jnp.float32))
+    np.testing.assert_array_equal(
+        partition.assign_kernel(plan, xm, backend=backend),
+        partition.assign_kernel(plan, xm),
+    )
+    np.testing.assert_array_equal(
+        partition.whole_membership(plan, xm, backend=backend),
+        partition.whole_membership(plan, xm),
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end byte-identity: fused on vs off, both executors, fixed seeds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", JOIN_METRICS)
+@pytest.mark.parametrize("tighten", [True, False])
+def test_join_fused_on_off_byte_identical(metric, tighten, rng):
+    if metric == "jaccard_minhash":
+        data = rng.integers(0, 30, size=(250, 16)).astype(np.float32)
+        delta = 0.4
+    else:
+        data = rng.normal(size=(250, 5)).astype(np.float32)
+        delta = {"l1": 2.0, "l2": 1.0, "linf": 0.6, "cosine": 0.05, "angular": 0.15}[
+            metric
+        ]
+    cfg = spjoin.JoinConfig(
+        delta=delta, metric=metric, k=64, p=8, n_dims=3, tighten=tighten
+    )
+    r_on = spjoin.join(data, cfg)
+    r_off = spjoin.join(data, dataclasses.replace(cfg, map_fused=False))
+    assert r_on.pairs.tobytes() == r_off.pairs.tobytes()
+    if metric not in ("cosine",):  # pseudo-metric: identity only, no oracle
+        truth = spjoin.brute_force_pairs(data, delta, metric)
+        np.testing.assert_array_equal(r_on.pairs, truth)
+
+
+def test_join_fused_pallas_backend_exact(rng):
+    """The fused kernel inside the full reference pipeline (interpret mode
+    off-TPU) still produces the exact join."""
+    data = rng.normal(size=(180, 5)).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=1.5, metric="l1", k=64, p=8, n_dims=3,
+                            backend="pallas")
+    res = spjoin.join(data, cfg)
+    np.testing.assert_array_equal(
+        res.pairs, spjoin.brute_force_pairs(data, 1.5, "l1")
+    )
+
+
+def test_distributed_fused_on_off_byte_identical_1dev(rng):
+    mesh = jax.make_mesh((1,), ("data",))
+    data = jnp.asarray(rng.normal(size=(220, 5)), jnp.float32)
+    rs = {}
+    for fused in (True, False):
+        r = dict()
+        from repro.core import distributed
+
+        res = distributed.distributed_join(
+            data, mesh=mesh, delta=2.0, metric="l1", k=64, p=4, n_dims=3,
+            emit_pairs=True, map_fused=fused, seed=0,
+        )
+        r["pairs"] = res.pairs
+        r["verif"] = res.n_verifications
+        rs[fused] = r
+    assert rs[True]["pairs"].tobytes() == rs[False]["pairs"].tobytes()
+    assert rs[True]["verif"] == rs[False]["verif"]
+
+
+@pytest.mark.slow
+def test_distributed_fused_on_off_byte_identical_8dev():
+    """Multi-device parity: subprocess with 8 simulated CPU devices so the
+    device-count flag never leaks into the suite."""
+    prog = (
+        "import os\n"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n"
+        + textwrap.dedent(
+            """
+            import json, numpy as np, jax, jax.numpy as jnp
+            mesh = jax.make_mesh((8,), ("data",))
+            from repro.core import distributed, spjoin
+            rng = np.random.default_rng(0)
+            data = np.concatenate([
+                rng.normal(loc=c, scale=1.0, size=(200, 6)) for c in (0., 5., 10.)
+            ]).astype(np.float32)
+            out = {}
+            for fused in (True, False):
+                r = distributed.distributed_join(
+                    jnp.asarray(data), mesh=mesh, delta=3.0, metric="l2", k=192,
+                    p=16, n_dims=4, emit_pairs=True, map_fused=fused, seed=0)
+                out[str(fused)] = r.pairs.tolist()
+            truth = spjoin.brute_force_pairs(data, 3.0, "l2").tolist()
+            print(json.dumps(dict(identical=out["True"] == out["False"],
+                                  exact=out["True"] == truth)))
+            """
+        )
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.splitlines()[-1])
+    assert res["identical"] and res["exact"], res

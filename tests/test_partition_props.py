@@ -1,0 +1,103 @@
+"""Hypothesis property tests for the partition invariants the fused
+map-phase kernel relies on (previously only exercised indirectly through
+end-to-end joins):
+
+  * kernel boxes tile ℝⁿ — exactly one half-open cell contains any point,
+    for any plan ``build_partition`` can produce (either strategy, any p);
+  * whole ⊇ kernel — box-wise (lo/hi dominance) and object-wise (every
+    object is a whole-member of its own kernel cell);
+  * ``tighten`` preserves both — kernel boxes untouched, every object still
+    whole-member of its own cell after the MBB shrink + δ re-expansion.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances, mapping, partition
+
+
+def _make_plan(seed, p, n, strategy, delta=0.7, k=48, m=5):
+    rng = np.random.default_rng(seed)
+    pivots = rng.normal(size=(k, m)).astype(np.float32)
+    smap = mapping.select_anchors(
+        jax.random.PRNGKey(seed % 1000), jnp.asarray(pivots), n, "l1"
+    )
+    mapped = np.asarray(smap(jnp.asarray(pivots)))
+    labels = None
+    if strategy == "learning":
+        d = np.asarray(
+            distances.pairwise(jnp.asarray(pivots), jnp.asarray(pivots), "l1")
+        )
+        labels = partition.single_linkage_labels(d, min(2 * p, k))
+    plan = partition.build_partition(mapped, p, delta, strategy, labels, seed)
+    return plan, mapped, rng
+
+
+def _probe_points(plan, mapped, rng, scale):
+    """Random points, the mapped pivots themselves, and on-edge corners —
+    half-open boxes make box edges the interesting inputs."""
+    n = plan.n_dims
+    pts = [rng.normal(scale=scale, size=(120, n)).astype(np.float32), mapped[:, :n].astype(np.float32)]
+    corners = np.where(np.abs(np.asarray(plan.kernel_lo)) < 1e30, np.asarray(plan.kernel_lo), 0.0)
+    pts.append(corners.astype(np.float32))
+    return np.concatenate(pts)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    p=st.integers(1, 40),
+    n=st.integers(1, 5),
+    strategy=st.sampled_from(["iterative", "learning"]),
+    scale=st.floats(0.5, 30.0),
+)
+def test_kernel_boxes_tile_space(seed, p, n, strategy, scale):
+    """Lemma 3 (1) as a property: exactly ONE kernel cell per ℝⁿ point —
+    including points far outside the pivot hull and points ON box edges."""
+    plan, mapped, rng = _make_plan(seed, p, n, strategy)
+    pts = _probe_points(plan, mapped, rng, scale)
+    inside = (pts[:, None, :] >= np.asarray(plan.kernel_lo)[None]) & (
+        pts[:, None, :] < np.asarray(plan.kernel_hi)[None]
+    )
+    counts = inside.all(-1).sum(1)
+    assert (counts == 1).all(), np.unique(counts)
+    # assign_kernel agrees with the containment mask it summarizes
+    cells = np.asarray(partition.assign_kernel(plan, jnp.asarray(pts)))
+    assert inside.all(-1)[np.arange(len(pts)), cells].all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    p=st.integers(1, 24),
+    n=st.integers(1, 5),
+    strategy=st.sampled_from(["iterative", "learning"]),
+)
+def test_whole_contains_kernel_and_tighten_preserves(seed, p, n, strategy):
+    plan, mapped, rng = _make_plan(seed, p, n, strategy)
+    # Box-wise dominance (pre-tighten: whole = kernel ± δ by construction).
+    assert (np.asarray(plan.whole_lo) <= np.asarray(plan.kernel_lo)).all()
+    assert (np.asarray(plan.whole_hi) >= np.asarray(plan.kernel_hi)).all()
+
+    pts = jnp.asarray(_probe_points(plan, mapped, rng, scale=3.0))
+    cells = partition.assign_kernel(plan, pts)
+    member = np.asarray(partition.whole_membership(plan, pts))
+    idx = np.arange(pts.shape[0])
+    # Object-wise: whole ⊇ kernel — every object is W-member of its own cell.
+    assert member[idx, np.asarray(cells)].all()
+
+    tplan = partition.tighten(plan, pts, cells)
+    # Kernel boxes (hence cell assignment) are untouched by tightening...
+    np.testing.assert_array_equal(
+        np.asarray(tplan.kernel_lo), np.asarray(plan.kernel_lo)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(tplan.kernel_hi), np.asarray(plan.kernel_hi)
+    )
+    tmember = np.asarray(partition.whole_membership(tplan, pts))
+    # ...and the shrunk-then-δ-expanded whole boxes still cover every
+    # object's own cell (the Lemma 4 precondition tighten must preserve).
+    assert tmember[idx, np.asarray(cells)].all()
+    # Tightening only ever removes members.
+    assert (tmember <= member).all()
