@@ -21,15 +21,22 @@ Sections (``--rs`` adds a fourth):
    ``map_ms_legacy`` wall times, the modeled HBM-intermediate saving
    ``map_bytes_saved`` (2·N·p·n + N·p bool bytes avoided minus the N·⌈p/32⌉
    packed words written) and asserts outputs are byte-identical.
-4. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
+4. placement — cost-model-guided reduce placement (``core.placement``) on a
+   hard-skew mixture: contiguous vs LPT cell→device plans on the 8-device
+   mesh. Reports measured per-device ``balance_std`` / ``makespan_ratio``,
+   the planner's quality report (certified bound), slot/split counts and the
+   capacity effect; asserts both placements emit byte-identical pair sets.
+5. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
    (the skew-sensitive case), exactness-checked in-subprocess against the
    brute-force cross oracle; reports wall time, W capacity, the S-side
    duplication metric Σ|W_h|/|S| and the pruning rate.
 
 Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
 smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke --rs``
-must run to completion, write it, report a NONZERO pruning rate and a
-byte-identical map-phase section). Schema of the JSON: docs/BENCHMARKS.md.
+must run to completion, write it, report a NONZERO pruning rate, a
+byte-identical map-phase section, and a placement section with
+``placement_identical == true`` and LPT ``balance_std`` no worse than
+contiguous). Schema of the JSON: docs/BENCHMARKS.md.
 
 Run:
     PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke] [--rs]
@@ -155,6 +162,47 @@ print(json.dumps(out))
 """
 
 
+_SUB_PLACEMENT = """
+import os
+os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'
+import json, time, numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed
+from repro.data import synthetic
+
+mesh = jax.make_mesh((8,), ("data",))
+# Hard-skew mixture: one cluster dominates, so contiguous placement parks
+# the hot cell(s) on one straggler device — the regime Table 3 is about.
+data = synthetic.mixture({n}, 12, n_clusters=5, skew={skew}, seed=3)
+out = {{}}
+pairs = {{}}
+for strategy in ("contiguous", "lpt"):
+    walls = []
+    for rep in range(2):  # rep 0 warms compile caches; rep 1 is steady state
+        t0 = time.perf_counter()
+        r = distributed.distributed_join(
+            jnp.asarray(data), mesh=mesh, delta={delta}, metric="l1", k=256,
+            p=16, n_dims=6, sampler="generative", backend="numpy",
+            placement=strategy, emit_pairs=True, seed=0)
+        walls.append(time.perf_counter() - t0)
+    pairs[strategy] = r.pairs.tobytes()
+    pl = r.placement_plan
+    out[strategy] = dict(
+        wall_cold_s=walls[0], wall_s=walls[-1], hits=r.n_hits,
+        verif=r.n_verifications,
+        balance_std=float(r.balance_std),
+        makespan_ratio=float(r.makespan_ratio),
+        device_loads=[float(x) for x in r.device_loads],
+        capacity_saved_bytes=int(r.capacity_saved_bytes),
+        padding=float(r.capacity_padding),
+        n_slots=int(pl.n_slots), n_split_cells=int(pl.n_split_cells),
+        plan_makespan_ratio=float(pl.makespan_ratio),
+        plan_certified_bound=float(pl.certified_bound),
+    )
+out["placement_identical"] = pairs["contiguous"] == pairs["lpt"]
+print(json.dumps(out))
+"""
+
+
 def _run_sub(prog: str):
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = {"PYTHONPATH": os.path.join(root, "src"), "PATH": "/usr/bin:/bin",
@@ -176,6 +224,18 @@ def run_rs(n_r: int, n_s: int, delta: float) -> dict:
 
 def run_distributed(n: int, delta: float, arms) -> list[dict]:
     return _run_sub(_SUB.format(n=n, delta=delta, arms=repr(arms)))
+
+
+def run_placement(n: int, delta: float, skew: float = 0.85) -> dict:
+    """Section 5: contiguous vs LPT reduce placement on a hard-skew mixture
+    (8-device mesh). Reports measured per-device balance (`balance_std`,
+    `makespan_ratio`), the planner's own quality report and the capacity
+    effect; asserts the two placements emit byte-identical pair sets."""
+    out = _run_sub(_SUB_PLACEMENT.format(n=n, delta=delta, skew=skew))
+    assert out["placement_identical"], "placement changed the pair set"
+    out["n"] = n
+    out["skew"] = skew
+    return out
 
 
 def _map_bytes_saved(n: int, p: int, nd: int) -> int:
@@ -381,8 +441,22 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
                     row["map_bytes_saved"], row["identical"])
     csv_map.close()
 
+    placement = run_placement(max(n // 4, 400), delta)
+    csv_pl = Csv("bench_h3_placement.csv",
+                 ["strategy", "n", "skew", "wall_warm_s", "balance_std",
+                  "makespan_ratio", "n_slots", "n_split_cells",
+                  "capacity_saved_bytes", "padding", "identical"])
+    for strategy in ("contiguous", "lpt"):
+        row = placement[strategy]
+        csv_pl.row(strategy, placement["n"], placement["skew"],
+                   round(row["wall_s"], 2), round(row["balance_std"], 1),
+                   round(row["makespan_ratio"], 3), row["n_slots"],
+                   row["n_split_cells"], row["capacity_saved_bytes"],
+                   round(row["padding"], 2), placement["placement_identical"])
+    csv_pl.close()
+
     report = dict(smoke=smoke, distributed=rows, verify_engine=engine,
-                  map_phase=map_phase)
+                  map_phase=map_phase, placement=placement)
 
     if rs:
         # Asymmetric two-set arm: |R| = n/5 against |S| = n, exactness-checked

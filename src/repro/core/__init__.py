@@ -9,6 +9,8 @@ Modules map 1:1 onto the paper's sections:
   mapping      — §5.2 space mapping via anchor pivots (Lemma 4)
   partition    — §5.2 iterative (Alg. 5) + §5.3 learning-based (Alg. 6) partitioning
   cost_model   — §5.1 cost model G(A) (Eq. 28/33) and capacity prediction
+  placement    — §5.1 cost model as placement guideline: skew-aware
+                 cell→device planner (LPT + heavy-cell splitting)
   spjoin       — single-host end-to-end reference executor
   distributed  — shard_map multi-device 3-phase join (TPU-native adaptation)
   baselines    — ball-partition (MRSimJoin-like) + KPM-like baselines

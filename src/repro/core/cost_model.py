@@ -101,6 +101,30 @@ def estimate_from_samples(
     return v_est, w_est
 
 
+def predicted_cell_loads(
+    v_est: np.ndarray, w_est: np.ndarray, survival: float = 1.0
+) -> np.ndarray:
+    """Per-cell predicted verification loads — the placement planner's input.
+
+    Eq. 33's per-cell cost |V̂_h|·|Ŵ_h| from the sample-scaled estimates of
+    :func:`estimate_from_samples`, times the pivot-filter ``survival``
+    fraction (:func:`estimate_survival_rate`) so the loads model the exact
+    evaluations a device will actually run, not the pre-filter candidate
+    area. ``core.placement.plan_placement`` turns these into the cell→device
+    assignment; docs/COST_MODEL.md walks a worked example.
+
+    ``survival`` is floored at 1e-3: a sample estimate of exactly 0 is a
+    small-sample artifact (any true hit survives the bound), and a scalar
+    survival only rescales the loads — flooring preserves the per-cell
+    structure the planner needs instead of erasing it.
+    """
+    return (
+        np.asarray(v_est, np.float64)
+        * np.asarray(w_est, np.float64)
+        * float(np.clip(survival, 1e-3, 1.0))
+    )
+
+
 def predict_capacity(
     w_est: np.ndarray,
     n_shards: int,

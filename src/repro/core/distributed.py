@@ -39,10 +39,18 @@ The paper's three phases map onto three jitted ``shard_map`` stages over the
                  pre-mask + Pallas pairdist + fused ≤ δ mask). Pair de-dup
                  happens in the mask epilogue via the min-cell rule.
 
+  host placement the cost model's per-cell predicted loads (same pivot
+  plan           sample) feed ``core.placement``'s cell→device planner; the
+                 verify stage compiles with the plan's static slot
+                 permutation and per-slot capacities (``placement=`` knob).
+
 Skew economics on TPU: a skewed partition no longer straggles — it inflates
 the static capacity every device must allocate and stream. The padding ratio
 (Σ cap / Σ actual) is therefore the TPU-native analogue of the paper's
 "curse of the last reducer", and it is exactly what better pivots shrink.
+The placement plan attacks both sides: LPT balances per-device loads and
+heavy-cell splitting bounds the worst slot the capacities are sized by
+(docs/COST_MODEL.md).
 """
 from __future__ import annotations
 
@@ -58,6 +66,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
+from repro.core import placement as placement_lib
 from repro.core import verify as verify_lib
 from repro.kernels import ops as kops
 
@@ -315,11 +324,14 @@ def _scatter_dispatch(
     p: int,
     cap: int,
 ):
-    """Scatter rows into a (p, cap, ...) buffer by (cell, intra-cell rank).
+    """Scatter rows into a (p, cap, ...) buffer by (dest slot, intra-slot rank).
 
-    Rows whose cell == p, or whose rank overflows cap, are dropped (mode=drop)
-    and counted by the caller via the counting pass. Vectorized, O(n_loc · p)
-    for the rank computation (one cumsum per cell column)."""
+    ``cells_of_row`` is the destination DISPATCH SLOT of each row (the kernel
+    cell under contiguous placement; the planner's permuted/slab slot under
+    LPT — see ``core.placement``). Rows whose slot == p, or whose rank
+    overflows cap, are dropped (mode=drop); the overflow count is returned so
+    the caller can surface it. Vectorized, O(n_loc · p) for the rank
+    computation (one cumsum per slot column)."""
     onehot = (cells_of_row[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32)
     rank = jnp.cumsum(onehot, axis=0) - 1  # (n_loc, p)
     rank_of_row = jnp.take_along_axis(
@@ -338,7 +350,8 @@ def _scatter_dispatch(
     buf_cell = jnp.full((p, cap), -1, jnp.int32).at[cc, rr].set(
         own_cell.astype(jnp.int32), mode="drop"
     )
-    return buf, buf_ids, buf_cell
+    overflow = ((cells_of_row < p) & (rank_of_row >= cap)).sum()
+    return buf, buf_ids, buf_cell, overflow
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,15 +383,24 @@ class VerifyConfig:
 
 
 def make_stage_verify(
-    mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig, cross: bool = False
+    mesh: Mesh, axis: str, plan: JoinPlan, vcfg: VerifyConfig, cross: bool = False,
+    pl: placement_lib.PlacementPlan | None = None,
 ):
     """The fused map+shuffle+reduce stage.
 
-    Per shard: assign -> dispatch buffers keyed (dest cell, slot) ->
-    all_to_all over ``axis`` -> per-local-cell masked blocked verification.
+    Per shard: assign -> dispatch buffers keyed (dest slot, rank) ->
+    all_to_all over ``axis`` -> per-local-slot masked blocked verification.
 
-    Cell -> device: cell h lives on device h // cells_per_dev; requires
-    p % M == 0 (the driver rounds p up).
+    Cell -> device is governed by ``pl`` (``core.placement``): dispatch slot
+    ``d·spd + j`` lives on device ``d``. The default (``pl=None``) is the
+    historical contiguous layout — cell h on device h // (p/M), identity
+    permutation, no slabs; requires p % M == 0 (the driver rounds p up).
+    Under an LPT plan the scatter targets are permuted through
+    ``pl.dispatch_of_slot`` and a heavy cell's V rows are dealt round-robin
+    over its slabs (W rows replicated into each slab) — same buffers, same
+    single ``all_to_all``, byte-identical pair sets (each candidate pair
+    lands in exactly one slab and every slab keeps the cell's original id
+    for the de-dup rule).
 
     ``cross=False`` (self-join): V and W buffers are both scattered from the
     one data set; the min-cell de-dup rule applies. ``cross=True`` (R×S):
@@ -397,8 +419,14 @@ def make_stage_verify(
     """
     M = mesh.shape[axis]
     p = plan.p
-    assert p % M == 0, f"p={p} must be a multiple of mesh axis {axis}={M}"
-    p_loc = p // M
+    if pl is None:  # historical contiguous layout: cell h -> device h//(p/M)
+        pl = placement_lib.plan_placement(
+            np.zeros(p, np.float64), M, strategy="contiguous"
+        )
+    assert pl.p == p, f"placement planned for p={pl.p}, stage has p={p}"
+    n_slots = pl.n_slots
+    assert n_slots % M == 0, f"n_slots={n_slots} must be a multiple of {axis}={M}"
+    spd = n_slots // M  # dispatch slots per device
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
     map_fused = vcfg.map_fused
     backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
@@ -406,59 +434,80 @@ def make_stage_verify(
     n_dims = plan.anchors.shape[0]
     delta_bound = vcfg.delta_bound  # static — shared by mask + telemetry
 
+    # Static routing tables baked into the trace (identity under contiguous).
+    first_slot = jnp.asarray(pl.cell_first_slot, jnp.int32)  # (p,)
+    n_slabs = jnp.asarray(pl.cell_n_slabs, jnp.int32)  # (p,)
+    disp_of_slot = jnp.asarray(pl.dispatch_of_slot, jnp.int32)  # (n_slots,)
+    cell_of_disp_np = pl.cell_of_dispatch  # (n_slots,) original cell, -1 pad
+    # W gather columns in dispatch order; padding slots -> the extra
+    # always-False column p appended to the membership matrix.
+    w_col_of_disp = jnp.asarray(
+        np.where(cell_of_disp_np >= 0, cell_of_disp_np, p), jnp.int32
+    )
+    cell_id_of_disp = jnp.asarray(cell_of_disp_np, jnp.int32)
+
     def v_dispatch(x: Array, ids: Array, cells: Array, v: Array):
-        """Each valid row -> its kernel cell."""
+        """Each valid row -> its kernel cell's dispatch slot (a heavy cell's
+        rows are dealt round-robin over its slabs by intra-cell rank)."""
         v_cells = jnp.where(v, cells, p)
-        v_buf, v_ids, v_own = _scatter_dispatch(x, ids, v_cells, cells, p, cap_v)
-        overflow_v = (v & (v_cells < p)
-                      & (jnp.take_along_axis(jnp.cumsum(
-                          (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32),
-                          axis=0) - 1, jnp.clip(v_cells, 0, p - 1)[:, None], 1)[:, 0]
-                         >= cap_v)).sum()
-        return v_buf, v_ids, v_own, overflow_v
+        safe = jnp.clip(v_cells, 0, p - 1)
+        onehot = (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32)
+        rank_in_cell = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0) - 1, safe[:, None], axis=1
+        )[:, 0]
+        slot = first_slot[safe] + rank_in_cell % n_slabs[safe]
+        dest = jnp.where(v_cells < p, disp_of_slot[slot], n_slots)
+        return _scatter_dispatch(x, ids, dest, cells, n_slots, cap_v)
 
     def w_dispatch(x: Array, ids: Array, cells: Array, member: Array):
-        """Each valid row -> every whole-member cell (ranked slots)."""
-        w_rank = jnp.cumsum(member.astype(jnp.int32), axis=0) - 1  # (n_loc, p)
-        slot_ok = member & (w_rank < cap_w)
-        cc = jnp.where(slot_ok, jnp.arange(p)[None, :], p)  # (n_loc, p)
+        """Each valid row -> every whole-member cell's slot(s) — replicated
+        into each slab of a split cell (ranked per dispatch slot)."""
+        member_ext = jnp.concatenate(
+            [member, jnp.zeros((member.shape[0], 1), member.dtype)], axis=1
+        )
+        member_d = member_ext[:, w_col_of_disp]  # (n_loc, n_slots) disp order
+        w_rank = jnp.cumsum(member_d.astype(jnp.int32), axis=0) - 1
+        slot_ok = member_d & (w_rank < cap_w)
+        cc = jnp.where(slot_ok, jnp.arange(n_slots)[None, :], n_slots)
         rr = jnp.clip(w_rank, 0, cap_w - 1)
         w_buf = (
-            jnp.zeros((p, cap_w, x.shape[-1]), x.dtype)
+            jnp.zeros((n_slots, cap_w, x.shape[-1]), x.dtype)
             .at[cc, rr]
             .set(x[:, None, :], mode="drop")
         )
         w_ids = (
-            jnp.full((p, cap_w), -1, jnp.int32)
+            jnp.full((n_slots, cap_w), -1, jnp.int32)
             .at[cc, rr]
             .set(jnp.broadcast_to(ids.astype(jnp.int32)[:, None], cc.shape), mode="drop")
         )
         w_own = (
-            jnp.full((p, cap_w), -1, jnp.int32)
+            jnp.full((n_slots, cap_w), -1, jnp.int32)
             .at[cc, rr]
             .set(jnp.broadcast_to(cells[:, None], cc.shape), mode="drop")
         )
-        overflow_w = (member & (w_rank >= cap_w)).sum()
+        overflow_w = (member_d & (w_rank >= cap_w)).sum()
         return w_buf, w_ids, w_own, overflow_w
 
     def shuffle_and_verify(v_parts, w_parts, overflow):
-        """ONE all_to_all per side over the data axis, then per-local-cell
+        """ONE all_to_all per side over the data axis, then per-local-slot
         masked blocked verification."""
         def exchange(buf):
-            # (p, cap, ...) -> (M, p_loc, cap, ...) -> a2a -> received from
-            # every source shard: (M, p_loc, cap, ...).
-            shaped = buf.reshape(M, p_loc, *buf.shape[1:])
+            # (n_slots, cap, ...) -> (M, spd, cap, ...) -> a2a -> received
+            # from every source shard: (M, spd, cap, ...).
+            shaped = buf.reshape(M, spd, *buf.shape[1:])
             return jax.lax.all_to_all(shaped, axis, split_axis=0, concat_axis=0)
 
-        # -> per local cell: (p_loc, M*cap, ...)
+        # -> per local slot: (spd, M*cap, ...)
         def flat(r):
-            return jnp.moveaxis(r, 0, 1).reshape(p_loc, M * r.shape[2], *r.shape[3:])
+            return jnp.moveaxis(r, 0, 1).reshape(spd, M * r.shape[2], *r.shape[3:])
 
         fv, fvi, fvo = (flat(exchange(b)) for b in v_parts)
         fw, fwi, fwo = (flat(exchange(b)) for b in w_parts)
 
         my_dev = jax.lax.axis_index(axis)
-        local_cells = my_dev * p_loc + jnp.arange(p_loc)  # global cell ids here
+        # De-dup runs against the slot's ORIGINAL cell id (slabs share it),
+        # so placement can never change which pairs a cell emits.
+        local_cells = cell_id_of_disp[my_dev * spd + jnp.arange(spd)]
 
         # Distances, threshold, padding validity, the de-dup rule and the
         # pivot filter all live in repro.core.verify — the same code path
@@ -492,11 +541,13 @@ def make_stage_verify(
             "hits": hit_count.astype(jnp.float32)[None],
             "verified": n_verified.sum().astype(jnp.float32)[None],
             "candidates": n_cand.sum().astype(jnp.float32)[None],
+            # Per DISPATCH SLOT (== per cell under contiguous placement); the
+            # driver folds slabs back to cells and devices host-side.
             "per_cell_verified": n_verified.astype(jnp.float32),
             "overflow": overflow.astype(jnp.float32)[None],
         }
         if vcfg.emit_pairs:
-            out["masks"] = masks  # (p_loc, M*cap_v, M*cap_w)
+            out["masks"] = masks  # (spd, M*cap_v, M*cap_w)
             out["v_ids"] = fvi
             out["w_ids"] = fwi
         return out
@@ -584,11 +635,21 @@ class DistJoinResult:
     accept_rate: float
     pairs: np.ndarray | None = None  # (n_pairs, 2) when emit_pairs; self-join
     #   columns are (min, max) over one set — R×S: (i ∈ R, j ∈ S)
-    duplication: float = 0.0  # Σ|W_h| / |S| (|S|=N for self) — shuffle amp.
+    duplication: float = 0.0  # Σ_slots |W_slot| / |S| (|S|=N for self) — the
+    #   ACTUAL S-side shuffle amplification: == the paper's Σ|W_h|/|S| under
+    #   contiguous placement, and additionally counts the per-slab W replicas
+    #   when heavy-cell splitting engages (splitting buys balance with bytes)
     n_candidates: int = 0  # pairs surviving the pivot filter (exact evals)
     pruning_rate: float = 0.0  # 1 − n_candidates / n_verifications
     predicted_survival: float = 1.0  # cost-model (sample-based) survival est.
     prune: str = "none"  # resolved prune mode the stage compiled with
+    placement: str = "contiguous"  # cell→device strategy the stage compiled
+    placement_plan: Any = None  # the core.placement.PlacementPlan (telemetry)
+    device_loads: np.ndarray | None = None  # (M,) MEASURED verifications/dev
+    balance_std: float = 0.0  # std of measured per-device loads (Table 3)
+    makespan_ratio: float = 1.0  # max/mean of measured per-device loads
+    capacity_saved_bytes: int = 0  # dispatch-buffer bytes the plan saved
+    #   vs the contiguous global-max layout (negative = plan spends more)
 
 
 def _pad_shard_set(x: Array, M: int, sharding) -> tuple[Array, Array, Array, int]:
@@ -628,6 +689,7 @@ def distributed_join(
     tighten: bool = True,
     prune: str = "pivot",
     map_fused: bool = True,
+    placement: str = "lpt",
     seed: int = 0,
     s: Array | None = None,
 ) -> DistJoinResult:
@@ -669,6 +731,17 @@ def distributed_join(
     coordinate fp low bits may differ at box edges, which can move an object
     between adjacent cells without ever changing the emitted pair set (the
     join is exact under any containment-consistent assignment).
+
+    ``placement``: "lpt" (default) | "contiguous" — the cell→device plan of
+    the reduce phase (``core.placement``). "contiguous" is the historical
+    layout (cell h on device h // (p/M), one global worst-cell capacity);
+    "lpt" plans a skew-aware assignment from the cost model's per-cell
+    predicted loads (LPT bin packing + heavy-cell V-slab splitting) and
+    sizes the static capacities from the planned per-slot loads. Pair sets
+    are byte-identical under either — placement only moves work between
+    devices. Plan + measured balance land in the result
+    (``placement_plan``, ``device_loads``, ``balance_std``,
+    ``makespan_ratio``, ``capacity_saved_bytes``).
     """
     if not kops.supports_kernel(metric):
         raise ValueError(
@@ -779,11 +852,9 @@ def distributed_join(
         else:
             v_cnt, w_cnt, _, _ = jax.tree.map(np.asarray, counts_fn(data, valid))
 
-    exact_cap_v = max(int(v_cnt.max()), 1)
-    exact_cap_w = max(int(w_cnt.max()), 1)
-
     # Cost-model prediction from the pivots alone (what a single-pass system
-    # would have to provision) — reported for the EXPERIMENTS Table 3 story.
+    # would have to provision) — reported for the EXPERIMENTS Table 3 story,
+    # and the input of the placement planner below.
     piv_mapped = kops.pairdist(pivots, plan.anchors, metric, backend=backend)
     piv_cells = partition.assign_kernel(
         partition.PartitionPlan(plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi, delta),
@@ -793,60 +864,67 @@ def distributed_join(
         partition.PartitionPlan(plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi, delta),
         piv_mapped,
     )
-    v_est, w_est = cost_model.estimate_from_samples(
-        np.asarray(piv_cells), np.asarray(piv_member), n
-    )
-    if cross:
-        # The W side scales with |S|, not |R|. Caveat: the pivots approximate
-        # the POOLED R∪S mixture, so when the two distributions diverge this
-        # reported estimate is biased toward R's geography — only the
-        # exact-count cap_w below governs correctness; predicted_cap_w is the
-        # "single-pass provisioning" story metric.
-        _, w_est = cost_model.estimate_from_samples(
-            np.asarray(piv_cells), np.asarray(piv_member), n_s
-        )
-    predicted_cap_w = cost_model.predict_capacity(w_est, M, slack=1.25)
-
-    cap_v = int(np.ceil(exact_cap_v * capacity_slack))
-    cap_w = int(np.ceil(exact_cap_w * capacity_slack))
-
-    # ---- dispatch + verify ---------------------------------------------------
     prune_resolved = verify_lib.resolve_prune(prune, metric, True)
     delta_bound = (
         verify_lib.prune_band(delta, metric, data, s_arr if cross else None)
         if prune_resolved == "pivot"
         else None
     )
+
+    # ---- placement plan (cost-model-guided reduce placement) ----------------
+    # Predicted per-cell verification loads (Eq. 33 costs from the pivot
+    # sample, survival-adjusted — the fraction of candidate pivot pairs
+    # surviving the L∞ bound forecasts the post-filter exact-evaluation
+    # fraction) drive the cell→device plan; the EXACT counting-pass counts,
+    # re-laid-out per planned slot, size the static capacities — so placement
+    # never risks overflow, it only moves work and shrinks the worst-slot
+    # capacity. In R×S mode the W estimate scales with |S|, not |R|; caveat:
+    # the pivots approximate the POOLED R∪S mixture, so when the two
+    # distributions diverge the estimates are biased toward R's geography —
+    # only the exact-count capacities govern correctness; predicted_cap_w is
+    # the "single-pass provisioning" story metric.
+    cell_loads, predicted_survival, _, w_est = placement_lib.planner_inputs(
+        np.asarray(piv_mapped), np.asarray(piv_cells), np.asarray(piv_member),
+        n, n_s, delta, prune_resolved == "pivot",
+    )
+    predicted_cap_w = cost_model.predict_capacity(w_est, M, slack=1.25)
+    pl = placement_lib.plan_placement(cell_loads, M, strategy=placement)
+    v_slot, w_slot = placement_lib.slot_exact_counts(pl, v_cnt, w_cnt)
+    exact_cap_v = max(int(v_slot.max(initial=0)), 1)
+    exact_cap_w = max(int(w_slot.max(initial=0)), 1)
+    cap_v = int(np.ceil(exact_cap_v * capacity_slack))
+    cap_w = int(np.ceil(exact_cap_w * capacity_slack))
+    cap_saved = placement_lib.capacity_saved_bytes(
+        pl, v_cnt, w_cnt,
+        placement_lib.dispatch_row_bytes(m, n_dims, prune_resolved == "pivot"),
+        slack=capacity_slack,
+    )
+
+    # ---- dispatch + verify ---------------------------------------------------
     vcfg = VerifyConfig(
         cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend,
         prune=prune, delta_bound=delta_bound, map_fused=map_fused,
     )
-    # Sample-based pruning forecast (same pivots that sized the capacities):
-    # the fraction of CANDIDATE pivot pairs (V×W co-residency) surviving the
-    # L∞ bound estimates the post-filter exact-evaluation fraction.
-    predicted_survival = (
-        cost_model.estimate_survival_rate(
-            np.asarray(piv_mapped), delta,
-            cells=np.asarray(piv_cells), member=np.asarray(piv_member),
-        )
-        if prune_resolved == "pivot"
-        else 1.0
-    )
-    verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross)
+    verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross, pl=pl)
     out = (
         verify_fn(data, valid, ids, s_arr, valid_s, ids_s)
         if cross
         else verify_fn(data, valid, ids)
     )
 
-    per_cell = np.asarray(out["per_cell_verified"]).reshape(-1)
-    actual_v = int(v_cnt.sum())
-    actual_w = int(w_cnt.sum())
-    padding = (p * M * (cap_v + cap_w)) / max(actual_v + actual_w, 1)
+    # Per-slot telemetry (dispatch order) folds back to cells and devices.
+    per_slot = np.asarray(out["per_cell_verified"]).reshape(-1)  # (n_slots,)
+    cod = pl.cell_of_dispatch
+    per_cell = np.zeros(p, np.float32)
+    np.add.at(per_cell, cod[cod >= 0], per_slot[cod >= 0])
+    device_loads = per_slot.reshape(M, -1).sum(1)
+    actual_v = int(v_slot.sum())  # dispatched rows (W counts slab replicas)
+    actual_w = int(w_slot.sum())
+    padding = (pl.n_slots * M * (cap_v + cap_w)) / max(actual_v + actual_w, 1)
 
     pairs = None
     if emit_pairs:
-        masks = np.asarray(out["masks"])  # (M*p_loc, Mcap_v, Mcap_w) flattened over devices
+        masks = np.asarray(out["masks"])  # (M*spd, Mcap_v, Mcap_w) flattened over devices
         v_ids = np.asarray(out["v_ids"]).reshape(masks.shape[0], -1)
         w_ids = np.asarray(out["w_ids"]).reshape(masks.shape[0], -1)
         masks = masks.reshape(masks.shape[0], v_ids.shape[1], w_ids.shape[1])
@@ -877,4 +955,10 @@ def distributed_join(
         pruning_rate=float(1.0 - n_candidates / max(n_verifications, 1)),
         predicted_survival=float(predicted_survival),
         prune=prune_resolved,
+        placement=placement,
+        placement_plan=pl,
+        device_loads=device_loads,
+        balance_std=float(device_loads.std()),
+        makespan_ratio=float(device_loads.max() / max(device_loads.mean(), 1e-9)),
+        capacity_saved_bytes=int(cap_saved),
     )

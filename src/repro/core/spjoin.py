@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, distances, expfam, gof, mapping, partition, sampling
+from repro.core import placement as placement_lib
 from repro.core import verify as verify_lib
 from repro.kernels import ops as kops
 
@@ -61,6 +62,13 @@ class JoinConfig:
     #   like backend dispatch). False: always the legacy two-pass path.
     #   On/off is byte-identical on the numpy backend; on Pallas, coordinate
     #   fp low bits at box edges may differ (pair sets stay exact).
+    placement: str = "lpt"  # reduce-placement plan to REPORT ("lpt" |
+    #   "contiguous" — core.placement). The reference executor is single-host
+    #   so the plan never changes execution here; it is computed from the
+    #   same cost-model loads (sampled pivots, survival-adjusted) and the
+    #   same planner as the distributed executor, so parity tests can compare
+    #   the two plans and benchmarks can read predicted balance without a
+    #   device mesh. Devices modeled = the n_nodes argument of join().
     seed: int = 0
 
     def engine_config(self) -> verify_lib.EngineConfig:
@@ -81,6 +89,22 @@ class JoinResult:
     map_time_s: float
     verify_time_s: float
     verify_stats: verify_lib.VerifyStats | None = None  # engine telemetry
+    per_cell_verified: np.ndarray | None = None  # (p,) per-cell verification
+    #   loads |V_h|·|W_h| the engine ran — the Table 3 AVER/STDEV input,
+    #   same semantics as DistJoinResult.per_cell_verified
+    placement_plan: placement_lib.PlacementPlan | None = None  # the reported
+    #   cell→device plan (cfg.placement strategy over n_nodes devices)
+    device_loads: np.ndarray | None = None  # (n_nodes,) PREDICTED loads of
+    #   the plan (single host executes everything; the distributed executor
+    #   reports the measured analogue)
+    balance_std: float = 0.0  # std of per-device loads (predicted here;
+    #   same definition as DistJoinResult.balance_std, which is measured)
+    makespan_ratio: float = 1.0  # max/mean of per-device loads (predicted
+    #   here, measured on DistJoinResult — one definition across executors;
+    #   the plan's own makespan/lower-bound ratio is placement_plan.
+    #   makespan_ratio)
+    capacity_saved_bytes: int = 0  # modeled dispatch-buffer saving of the
+    #   plan vs the contiguous global-max layout (cf. distributed executor)
 
     @property
     def n_pairs(self) -> int:
@@ -288,6 +312,28 @@ def join(
         )
     else:
         cost = cost_model.partition_cost(stats["v_sizes"], stats["w_sizes"])
+
+    # ---- reduce-placement report (same cost-model loads + planner as the
+    # distributed executor; single-host, so the plan is telemetry only) ----
+    piv_mapped = np.asarray(smap(pivots), np.float32)
+    piv_cells = np.asarray(partition.assign_kernel(plan, jnp.asarray(piv_mapped)))
+    piv_member = np.asarray(partition.whole_membership(plan, jnp.asarray(piv_mapped)))
+    cell_loads, _, _, _ = placement_lib.planner_inputs(
+        piv_mapped, piv_cells, piv_member,
+        int(allx.shape[0]), int(s_all.shape[0]) if cross else int(allx.shape[0]),
+        cfg.delta, vstats.prune == "pivot",
+    )
+    pl = placement_lib.plan_placement(
+        cell_loads, max(len(shards), 1), strategy=cfg.placement
+    )
+    cap_saved = placement_lib.capacity_saved_bytes(
+        pl, stats["v_sizes"][None, :], stats["w_sizes"][None, :],
+        placement_lib.dispatch_row_bytes(
+            int(allx.shape[1]), smap.n_dims, vstats.prune == "pivot"
+        ),
+    )
+    dev_loads = pl.device_loads
+
     return JoinResult(
         pairs=pairs,
         n_verifications=vstats.n_verifications,
@@ -297,6 +343,12 @@ def join(
         map_time_s=t_map,
         verify_time_s=t_verify,
         verify_stats=vstats,
+        per_cell_verified=(stats["v_sizes"] * stats["w_sizes"]).astype(np.int64),
+        placement_plan=pl,
+        device_loads=dev_loads,
+        balance_std=float(dev_loads.std()),
+        makespan_ratio=float(dev_loads.max(initial=0.0) / max(dev_loads.mean(), 1e-9)),
+        capacity_saved_bytes=int(cap_saved),
     )
 
 
