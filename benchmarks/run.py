@@ -14,7 +14,7 @@ import traceback
 from benchmarks import (
     fig6_techniques, fig7_sample_size, fig8_partitions, fig9_sota,
     fig10_scaleout, fig11_scaleup, fig12_verifications, table3_balance,
-    roofline,
+    roofline, serve_qps,
 )
 
 MODULES = {
@@ -27,6 +27,7 @@ MODULES = {
     "fig12": lambda q: fig12_verifications.run(n=800 if q else 1200),
     "table3": lambda q: table3_balance.run(n=800 if q else 1200),
     "roofline": lambda q: roofline.run(),
+    "serve_qps": lambda q: serve_qps.run(smoke=q),
 }
 
 

@@ -69,6 +69,7 @@ from repro.core import cost_model, distances, expfam, gof, mapping, partition, s
 from repro.core import placement as placement_lib
 from repro.core import verify as verify_lib
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Array = jnp.ndarray
 
@@ -355,6 +356,109 @@ def _scatter_dispatch(
 
 
 @dataclasses.dataclass(frozen=True)
+class _RoutingTables:
+    """Static slot-routing tables of a placement plan, baked into stage
+    traces. One construction shared by the join's verify stage and the
+    serving stage (``make_stage_serve``) so the two can never disagree on
+    how a cell maps to dispatch slots."""
+
+    p: int
+    n_slots: int
+    first_slot: Array  # (p,) first slot of each cell
+    n_slabs: Array  # (p,) V-slab count per cell
+    disp_of_slot: Array  # (n_slots,) slot -> dispatch permutation
+    w_col_of_disp: Array  # (n_slots,) membership gather column per dispatch
+    #   index (padding slots -> the always-False extra column p)
+    cell_id_of_disp: Array  # (n_slots,) original cell id, -1 = padding
+
+
+def _routing_tables(pl: placement_lib.PlacementPlan) -> _RoutingTables:
+    p = pl.p
+    cell_of_disp_np = pl.cell_of_dispatch
+    return _RoutingTables(
+        p=p,
+        n_slots=pl.n_slots,
+        first_slot=jnp.asarray(pl.cell_first_slot, jnp.int32),
+        n_slabs=jnp.asarray(pl.cell_n_slabs, jnp.int32),
+        disp_of_slot=jnp.asarray(pl.dispatch_of_slot, jnp.int32),
+        w_col_of_disp=jnp.asarray(
+            np.where(cell_of_disp_np >= 0, cell_of_disp_np, p), jnp.int32
+        ),
+        cell_id_of_disp=jnp.asarray(cell_of_disp_np, jnp.int32),
+    )
+
+
+def _make_v_dispatch(rt: _RoutingTables, cap_v: int):
+    """Each valid row -> its kernel cell's dispatch slot (a heavy cell's
+    rows are dealt round-robin over its slabs by intra-cell rank)."""
+    p, n_slots = rt.p, rt.n_slots
+
+    def v_dispatch(x: Array, ids: Array, cells: Array, v: Array):
+        v_cells = jnp.where(v, cells, p)
+        safe = jnp.clip(v_cells, 0, p - 1)
+        onehot = (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32)
+        rank_in_cell = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0) - 1, safe[:, None], axis=1
+        )[:, 0]
+        slot = rt.first_slot[safe] + rank_in_cell % rt.n_slabs[safe]
+        dest = jnp.where(v_cells < p, rt.disp_of_slot[slot], n_slots)
+        return _scatter_dispatch(x, ids, dest, cells, n_slots, cap_v)
+
+    return v_dispatch
+
+
+def _make_w_dispatch(rt: _RoutingTables, cap_w: int):
+    """Each valid row -> every whole-member cell's slot(s) — replicated into
+    each slab of a split cell (ranked per dispatch slot)."""
+    n_slots = rt.n_slots
+
+    def w_dispatch(x: Array, ids: Array, cells: Array, member: Array):
+        member_ext = jnp.concatenate(
+            [member, jnp.zeros((member.shape[0], 1), member.dtype)], axis=1
+        )
+        member_d = member_ext[:, rt.w_col_of_disp]  # (n_loc, n_slots) disp order
+        w_rank = jnp.cumsum(member_d.astype(jnp.int32), axis=0) - 1
+        slot_ok = member_d & (w_rank < cap_w)
+        cc = jnp.where(slot_ok, jnp.arange(n_slots)[None, :], n_slots)
+        rr = jnp.clip(w_rank, 0, cap_w - 1)
+        w_buf = (
+            jnp.zeros((n_slots, cap_w, x.shape[-1]), x.dtype)
+            .at[cc, rr]
+            .set(x[:, None, :], mode="drop")
+        )
+        w_ids = (
+            jnp.full((n_slots, cap_w), -1, jnp.int32)
+            .at[cc, rr]
+            .set(jnp.broadcast_to(ids.astype(jnp.int32)[:, None], cc.shape), mode="drop")
+        )
+        w_own = (
+            jnp.full((n_slots, cap_w), -1, jnp.int32)
+            .at[cc, rr]
+            .set(jnp.broadcast_to(cells[:, None], cc.shape), mode="drop")
+        )
+        overflow_w = (member_d & (w_rank >= cap_w)).sum()
+        return w_buf, w_ids, w_own, overflow_w
+
+    return w_dispatch
+
+
+def _make_exchange(axis: str, M: int, spd: int):
+    """The shuffle: ONE ``all_to_all`` over ``axis`` per buffer, plus the
+    (M, spd, cap, ...) -> per-local-slot (spd, M·cap, ...) flattening."""
+
+    def exchange(buf):
+        # (n_slots, cap, ...) -> (M, spd, cap, ...) -> a2a -> received
+        # from every source shard: (M, spd, cap, ...).
+        shaped = buf.reshape(M, spd, *buf.shape[1:])
+        return jax.lax.all_to_all(shaped, axis, split_axis=0, concat_axis=0)
+
+    def flat(r):
+        return jnp.moveaxis(r, 0, 1).reshape(spd, M * r.shape[2], *r.shape[3:])
+
+    return exchange, flat
+
+
+@dataclasses.dataclass(frozen=True)
 class VerifyConfig:
     """Static knobs compiled into the verify stage.
 
@@ -424,7 +528,8 @@ def make_stage_verify(
             np.zeros(p, np.float64), M, strategy="contiguous"
         )
     assert pl.p == p, f"placement planned for p={pl.p}, stage has p={p}"
-    n_slots = pl.n_slots
+    rt = _routing_tables(pl)
+    n_slots = rt.n_slots
     assert n_slots % M == 0, f"n_slots={n_slots} must be a multiple of {axis}={M}"
     spd = n_slots // M  # dispatch slots per device
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
@@ -434,73 +539,16 @@ def make_stage_verify(
     n_dims = plan.anchors.shape[0]
     delta_bound = vcfg.delta_bound  # static — shared by mask + telemetry
 
-    # Static routing tables baked into the trace (identity under contiguous).
-    first_slot = jnp.asarray(pl.cell_first_slot, jnp.int32)  # (p,)
-    n_slabs = jnp.asarray(pl.cell_n_slabs, jnp.int32)  # (p,)
-    disp_of_slot = jnp.asarray(pl.dispatch_of_slot, jnp.int32)  # (n_slots,)
-    cell_of_disp_np = pl.cell_of_dispatch  # (n_slots,) original cell, -1 pad
-    # W gather columns in dispatch order; padding slots -> the extra
-    # always-False column p appended to the membership matrix.
-    w_col_of_disp = jnp.asarray(
-        np.where(cell_of_disp_np >= 0, cell_of_disp_np, p), jnp.int32
-    )
-    cell_id_of_disp = jnp.asarray(cell_of_disp_np, jnp.int32)
-
-    def v_dispatch(x: Array, ids: Array, cells: Array, v: Array):
-        """Each valid row -> its kernel cell's dispatch slot (a heavy cell's
-        rows are dealt round-robin over its slabs by intra-cell rank)."""
-        v_cells = jnp.where(v, cells, p)
-        safe = jnp.clip(v_cells, 0, p - 1)
-        onehot = (v_cells[:, None] == jnp.arange(p)[None, :]).astype(jnp.int32)
-        rank_in_cell = jnp.take_along_axis(
-            jnp.cumsum(onehot, axis=0) - 1, safe[:, None], axis=1
-        )[:, 0]
-        slot = first_slot[safe] + rank_in_cell % n_slabs[safe]
-        dest = jnp.where(v_cells < p, disp_of_slot[slot], n_slots)
-        return _scatter_dispatch(x, ids, dest, cells, n_slots, cap_v)
-
-    def w_dispatch(x: Array, ids: Array, cells: Array, member: Array):
-        """Each valid row -> every whole-member cell's slot(s) — replicated
-        into each slab of a split cell (ranked per dispatch slot)."""
-        member_ext = jnp.concatenate(
-            [member, jnp.zeros((member.shape[0], 1), member.dtype)], axis=1
-        )
-        member_d = member_ext[:, w_col_of_disp]  # (n_loc, n_slots) disp order
-        w_rank = jnp.cumsum(member_d.astype(jnp.int32), axis=0) - 1
-        slot_ok = member_d & (w_rank < cap_w)
-        cc = jnp.where(slot_ok, jnp.arange(n_slots)[None, :], n_slots)
-        rr = jnp.clip(w_rank, 0, cap_w - 1)
-        w_buf = (
-            jnp.zeros((n_slots, cap_w, x.shape[-1]), x.dtype)
-            .at[cc, rr]
-            .set(x[:, None, :], mode="drop")
-        )
-        w_ids = (
-            jnp.full((n_slots, cap_w), -1, jnp.int32)
-            .at[cc, rr]
-            .set(jnp.broadcast_to(ids.astype(jnp.int32)[:, None], cc.shape), mode="drop")
-        )
-        w_own = (
-            jnp.full((n_slots, cap_w), -1, jnp.int32)
-            .at[cc, rr]
-            .set(jnp.broadcast_to(cells[:, None], cc.shape), mode="drop")
-        )
-        overflow_w = (member_d & (w_rank >= cap_w)).sum()
-        return w_buf, w_ids, w_own, overflow_w
+    # Static routing tables + dispatch/shuffle closures (identity permutation
+    # under contiguous placement) — shared with make_stage_serve.
+    cell_id_of_disp = rt.cell_id_of_disp
+    v_dispatch = _make_v_dispatch(rt, cap_v)
+    w_dispatch = _make_w_dispatch(rt, cap_w)
+    exchange, flat = _make_exchange(axis, M, spd)
 
     def shuffle_and_verify(v_parts, w_parts, overflow):
         """ONE all_to_all per side over the data axis, then per-local-slot
         masked blocked verification."""
-        def exchange(buf):
-            # (n_slots, cap, ...) -> (M, spd, cap, ...) -> a2a -> received
-            # from every source shard: (M, spd, cap, ...).
-            shaped = buf.reshape(M, spd, *buf.shape[1:])
-            return jax.lax.all_to_all(shaped, axis, split_axis=0, concat_axis=0)
-
-        # -> per local slot: (spd, M*cap, ...)
-        def flat(r):
-            return jnp.moveaxis(r, 0, 1).reshape(spd, M * r.shape[2], *r.shape[3:])
-
         fv, fvi, fvo = (flat(exchange(b)) for b in v_parts)
         fw, fwi, fwo = (flat(exchange(b)) for b in w_parts)
 
@@ -962,3 +1010,271 @@ def distributed_join(
         makespan_ratio=float(device_loads.max() / max(device_loads.mean(), 1e-9)),
         capacity_saved_bytes=int(cap_saved),
     )
+
+
+# ---------------------------------------------------------------------------
+# Query serving: pinned V buffers + W-side-only dispatch (core.index backend)
+# ---------------------------------------------------------------------------
+
+
+def make_stage_serve(
+    mesh: Mesh,
+    axis: str,
+    qplan: JoinPlan,
+    pl: placement_lib.PlacementPlan,
+    *,
+    cap_w: int,
+    backend: str,
+    prune: str,
+    delta_bound: float | None = None,
+    map_fused: bool = True,
+):
+    """The query phase of a persistent index: verify a query batch against
+    V buffers that are ALREADY RESIDENT per device (``DistIndex`` pins them
+    once at build) — only the queries move.
+
+    Per shard: the same fused map-assign as the join's map phase routes the
+    local queries to their whole-member cells under the δ-expanded query
+    boxes, the shared W-dispatch scatters them (coords ride as trailing
+    payload columns under the pivot filter), ONE ``all_to_all`` over
+    ``axis``, then per-local-slot ``verify_tile`` in R×S mode against the
+    pinned V slots. No sampling, no partitioning, zero V-side bytes on the
+    wire per batch.
+
+    The routing tables, W dispatch and shuffle closures are the exact ones
+    ``make_stage_verify`` compiles with (module-level factories), so serving
+    and the one-shot join can never disagree on slot semantics.
+    """
+    M = mesh.shape[axis]
+    rt = _routing_tables(pl)
+    n_slots = rt.n_slots
+    assert n_slots % M == 0, f"n_slots={n_slots} must be a multiple of {axis}={M}"
+    spd = n_slots // M
+    n_dims = qplan.anchors.shape[0]
+    cell_id_of_disp = rt.cell_id_of_disp
+    w_dispatch = _make_w_dispatch(rt, cap_w)
+    exchange, flat = _make_exchange(axis, M, spd)
+
+    def per_shard(fv: Array, fvi: Array, q: Array, valid: Array, ids: Array):
+        # fv: (spd, cap_v, m[+n]) this device's pinned V slots (dispatch
+        # order); fvi: (spd, cap_v) their global R ids (pad = -1).
+        cells_q, member_q, _, qm = _map_assign(qplan, q, valid, backend, map_fused)
+        rows = (
+            jnp.concatenate([q, qm.astype(q.dtype)], axis=1)
+            if prune == "pivot"
+            else q
+        )
+        w_buf, w_ids, w_own, overflow = w_dispatch(rows, ids, cells_q, member_q)
+        fw = flat(exchange(w_buf))
+        fwi = flat(exchange(w_ids))
+        fwo = flat(exchange(w_own))
+
+        my_dev = jax.lax.axis_index(axis)
+        local_cells = cell_id_of_disp[my_dev * spd + jnp.arange(spd)]
+
+        def verify_slot(vx, vids, wx, wids, wown, cell_id):
+            pv = pw = None
+            if prune == "pivot":
+                vx, pv = vx[:, :-n_dims], vx[:, -n_dims:]
+                wx, pw = wx[:, :-n_dims], wx[:, -n_dims:]
+            mask = verify_lib.verify_tile(
+                vx, wx, vids, wids, wown, cell_id,
+                delta=qplan.delta, metric=qplan.metric, backend=backend,
+                cross=True, pv=pv, pw=pw, prune=prune,
+                delta_bound=delta_bound,
+            )
+            return mask, verify_lib.pair_validity(vids, wids).sum()
+
+        masks, n_verified = jax.vmap(verify_slot)(fv, fvi, fw, fwi, fwo, local_cells)
+        return {
+            "masks": masks,  # (spd, cap_v, M*cap_w)
+            "w_ids": fwi,
+            "hits": masks.sum().astype(jnp.float32)[None],
+            "verified": n_verified.sum().astype(jnp.float32)[None],
+            "overflow": overflow.astype(jnp.float32)[None],
+        }
+
+    shmap = compat.shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(P(axis),) * 5,
+        out_specs={
+            "masks": P(axis), "w_ids": P(axis), "hits": P(axis),
+            "verified": P(axis), "overflow": P(axis),
+        },
+        check_vma=False,
+    )
+    return jax.jit(shmap)
+
+
+@dataclasses.dataclass
+class DistIndex:
+    """A ``core.index.MetricIndex`` pinned on a device mesh for serving.
+
+    ``from_index`` lays the indexed set's rows out per placement slot
+    (slabs deal V rows round-robin by intra-cell rank, exactly like the
+    join's V dispatch), device_puts the buffers sharded over ``axis`` ONCE,
+    and re-plans placement (cheap: a static permutation from the stored
+    cost-model loads — no re-sampling, no re-partitioning) when the mesh
+    size differs from the plan the index was built for. Every
+    ``query_batch`` after that moves only query bytes: one fused map pass,
+    one W-side ``all_to_all``, per-slot tiled verification against the
+    resident V buffers. See docs/SERVING.md for the lifecycle.
+    """
+
+    index: Any  # the host MetricIndex (duck-typed; no import cycle)
+    mesh: Mesh
+    axis: str
+    pl: placement_lib.PlacementPlan  # re-planned for this mesh if needed
+    backend: str  # resolved concrete backend
+    prune: str  # resolved prune mode
+    cap_v: int
+    fv: Array  # (n_slots, cap_v, m[+n]) pinned V payload, dispatch order,
+    #   sharded over ``axis`` on dim 0
+    fv_ids: Array  # (n_slots, cap_v) int32 global R ids, same layout
+    _fv_ids_host: np.ndarray  # host copy for pair extraction
+    _x_abs: float  # max |payload| of the indexed set (prune-band input)
+    _stages: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @classmethod
+    def from_index(cls, index: Any, mesh: Mesh, axis: str = "data") -> "DistIndex":
+        if not kops.supports_kernel(index.metric):
+            raise ValueError(
+                f"distributed serving supports kernel metrics only "
+                f"({kops.METRICS}); got {index.metric!r} — query the host "
+                f"MetricIndex directly for reference-path metrics"
+            )
+        M = mesh.shape[axis]
+        backend = kops.resolve_backend(index.backend, index.metric)
+        prune = verify_lib.resolve_prune(index.prune, index.metric, True)
+        pl = index.placement
+        if pl.n_devices != M:
+            # Cheap re-plan: same cost-model loads, new device count — a
+            # static permutation, never a rebuild (docs/SERVING.md).
+            pl = placement_lib.plan_placement(
+                pl.cell_loads, M, strategy=index.placement_strategy
+            )
+        payload = (
+            np.concatenate([index.data, index.coords.astype(index.data.dtype)], axis=1)
+            if prune == "pivot"
+            else index.data
+        )
+        # Slot layout (slot order): slab j of cell h takes the cell's rows
+        # with intra-cell rank ≡ j (mod n_slabs) — the V-dispatch deal.
+        slot_rows = []
+        for slot in range(pl.n_slots):
+            cell = int(pl.slot_cell[slot])
+            if cell < 0:
+                slot_rows.append(np.zeros(0, np.int64))
+                continue
+            rows = index.v_lists[cell]
+            s = int(pl.cell_n_slabs[cell])
+            slot_rows.append(rows[int(pl.slot_slab[slot])::s])
+        cap_v = max(1, max(r.size for r in slot_rows))
+        buf = np.zeros((pl.n_slots, cap_v, payload.shape[1]), np.float32)
+        ids = np.full((pl.n_slots, cap_v), -1, np.int32)
+        for slot, rows in enumerate(slot_rows):
+            buf[slot, : rows.size] = payload[rows]
+            ids[slot, : rows.size] = rows
+        # Slot order -> dispatch order: device d owns dispatch d·spd .. — the
+        # same addressing every stage's all_to_all output uses.
+        disp = pl.dispatch_of_slot
+        buf_d = np.empty_like(buf)
+        ids_d = np.empty_like(ids)
+        buf_d[disp] = buf
+        ids_d[disp] = ids
+        sharding = NamedSharding(mesh, P(axis))
+        return cls(
+            index=index,
+            mesh=mesh,
+            axis=axis,
+            pl=pl,
+            backend=backend,
+            prune=prune,
+            cap_v=cap_v,
+            fv=jax.device_put(jnp.asarray(buf_d), sharding),
+            fv_ids=jax.device_put(jnp.asarray(ids_d), sharding),
+            _fv_ids_host=ids_d,
+            _x_abs=float(np.abs(payload).max(initial=0.0)),
+        )
+
+    def _stage(self, delta: float, cap_w: int, delta_bound: float | None):
+        key = (float(delta), int(cap_w), delta_bound)
+        fn = self._stages.get(key)
+        if fn is None:
+            idx = self.index
+            qlo, qhi = idx.query_boxes(delta)
+            qplan = JoinPlan(
+                anchors=jnp.asarray(idx.anchors),
+                metric=idx.metric,
+                kernel_lo=jnp.asarray(idx.kernel_lo),
+                kernel_hi=jnp.asarray(idx.kernel_hi),
+                whole_lo=jnp.asarray(qlo),
+                whole_hi=jnp.asarray(qhi),
+                delta=float(delta),
+                p=idx.p,
+            )
+            fn = make_stage_serve(
+                self.mesh, self.axis, qplan, self.pl,
+                cap_w=cap_w, backend=self.backend, prune=self.prune,
+                delta_bound=delta_bound, map_fused=idx.map_fused,
+            )
+            self._stages[key] = fn
+        return fn
+
+    def query_batch(
+        self, q: Array | np.ndarray, delta: float | None = None
+    ) -> np.ndarray:
+        """Batched δ-range query over the mesh: (i ∈ R, j ∈ Q) pairs with
+        D ≤ δ, byte-identical to the host index's ``query_batch`` (and hence
+        to ``distances.brute_force_join``). Only query bytes move."""
+        idx = self.index
+        delta = idx.delta if delta is None else float(delta)
+        q_np = np.asarray(q, np.float32)
+        if q_np.shape[0] == 0:
+            return np.zeros((0, 2), np.int64)
+        M = self.n_devices
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        q_arr, valid, ids, _ = _pad_shard_set(jnp.asarray(q_np), M, sharding)
+
+        # Exact-fit W capacity from a host routing pass (same fused map path
+        # as the stage, so counts can never disagree), quantized up to a
+        # power of two so repeat batches reuse the compiled stage.
+        _, member = idx.route(q_np, delta)
+        n_tot = int(q_arr.shape[0])
+        per = n_tot // M
+        mem_pad = np.zeros((n_tot, idx.p), bool)
+        mem_pad[: q_np.shape[0]] = member
+        w_cnt = mem_pad.reshape(M, per, idx.p).sum(1)  # (M, p)
+        w_slot = w_cnt[:, np.clip(self.pl.slot_cell, 0, None)]
+        w_slot[:, self.pl.slot_cell < 0] = 0
+        exact = int(w_slot.max(initial=1))
+        cap_w = 1 << max(exact - 1, 1).bit_length()  # next pow2, ≥ 2
+
+        delta_bound = None
+        if self.prune == "pivot":
+            # Scale-aware fp band; the query magnitude is quantized up to a
+            # power of two so the (static) band doesn't recompile per batch.
+            q_abs = float(np.abs(q_np).max(initial=0.0))
+            q_pow = float(2.0 ** np.ceil(np.log2(max(q_abs, 1e-9))))
+            x_abs = max(self._x_abs, q_pow)
+            delta_bound = kref.prune_delta(
+                delta, idx.metric, x_abs, int(idx.data.shape[1])
+            )
+
+        out = self._stage(delta, cap_w, delta_bound)(
+            self.fv, self.fv_ids, q_arr, valid, ids
+        )
+        assert int(np.asarray(out["overflow"]).sum()) == 0, "serve W overflow"
+        masks = np.asarray(out["masks"])  # (n_slots, cap_v, M*cap_w)
+        w_ids = np.asarray(out["w_ids"]).reshape(masks.shape[0], -1)
+        slot, vi, wi = np.nonzero(masks)
+        if slot.size == 0:
+            return np.zeros((0, 2), np.int64)
+        gi = self._fv_ids_host[slot, vi]
+        gj = w_ids[slot, wi]
+        return np.unique(np.stack([gi, gj], axis=1), axis=0).astype(np.int64)

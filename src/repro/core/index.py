@@ -1,0 +1,595 @@
+"""Persistent metric index: build once, query millions (serving phase).
+
+Every call to ``spjoin.join`` / ``distributed_join`` re-runs the whole
+pipeline — sampling, GoF fits, anchor selection, the partition tree, the
+placement plan — which is correct for one batch join and wrong for serving
+query traffic. This module splits the pipeline into an explicit **build
+phase** and a **query phase** (the DIMS three-stage shape — arXiv
+2410.05091 — mapped onto our artifacts):
+
+  build  (once)   sampling → anchors → kernel boxes → per-cell member MBBs
+                  → cost-model placement plan → cached mapped coordinates
+                  and per-cell V row lists of the indexed set R.
+  query  (hot)    a batch of query points Q is routed through the SAME
+                  fused map-assign kernel as the join's map phase — each
+                  query's anchor distances (its mapped coordinates) are
+                  computed exactly once and reused twice: first as the box
+                  containment test that routes it to only the owning cells
+                  (Lemma 4), then as the pivot-filter coordinates that
+                  prune candidate pairs before exact evaluation
+                  (``core.verify`` candidate mask). Verification streams
+                  through the tiled verify engine in R×S mode (V = the
+                  pinned index cells, W = the routed queries) without ever
+                  re-sampling, re-fitting or re-partitioning.
+
+δ at query time: the index stores the *pre-expansion* base boxes (the
+tightened member MBB of each cell, or the kernel box when ``tighten=False``)
+and expands them by the QUERY radius on the way in, so any ``delta`` — equal
+to, below, or above the build-time default — answers exactly (Lemma 4 holds
+for whatever radius the boxes were expanded by). The build-time δ is only the
+default radius and the one the placement plan was costed at; see
+docs/SERVING.md for the re-plan vs rebuild trade-off.
+
+On-disk format (``index.save(path)`` / ``MetricIndex.load(path)``): a
+directory holding ``manifest.json`` (format name + version, the build
+config, array shapes, the placement summary) and ``arrays.npz`` (every
+array, bit-exact). The manifest is validated first: an unknown format or a
+version this code does not speak fails loudly (``IndexFormatError``), and a
+manifest disagreeing with the caller's expected metric / δ / pivot count
+fails with ``IndexMismatchError`` instead of silently mis-answering —
+worked example in docs/SERVING.md.
+
+The distributed serving path (``index.to_distributed(mesh)`` →
+``core.distributed.DistIndex``) pins the per-slot V buffers on devices once
+and serves query batches through the verify stage's slot machinery — one
+W-side ``all_to_all`` per batch, zero R-side bytes moved after build.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances, mapping, partition, spjoin
+from repro.core import placement as placement_lib
+from repro.core import verify as verify_lib
+from repro.kernels import ops as kops
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.distributed import DistIndex
+
+Array = jnp.ndarray
+
+FORMAT_NAME = "spjoin-metric-index"
+FORMAT_VERSION = 1
+
+# Arrays persisted bit-exact in arrays.npz (name -> MetricIndex attribute).
+_ARRAYS = (
+    "data", "coords", "cells", "pivots", "anchors",
+    "kernel_lo", "kernel_hi", "box_lo", "box_hi",
+)
+_PLAN_ARRAYS = (
+    "cell_loads", "cell_first_slot", "cell_n_slabs",
+    "slot_cell", "slot_slab", "slot_load", "dispatch_of_slot",
+)
+
+
+class IndexFormatError(ValueError):
+    """The on-disk artifact is not a metric index this code can read."""
+
+
+class IndexMismatchError(ValueError):
+    """The manifest disagrees with the caller's expected query config."""
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Telemetry of one ``query_batch`` call (the serving analogue of
+    ``VerifyStats`` — which it embeds as ``verify``)."""
+
+    n_queries: int = 0
+    n_routed: int = 0  # Σ per-query owning-cell memberships (dispatch fan-out)
+    n_cells_touched: int = 0  # cells that received ≥ 1 query
+    route_s: float = 0.0  # map-assign + membership time
+    verify_s: float = 0.0  # tiled engine time
+    verify: verify_lib.VerifyStats | None = None
+
+    @property
+    def duplication(self) -> float:
+        """Σ memberships / |Q| — the query-side routing amplification
+        (the serving analogue of the shuffle metric Σ|W_h|/|S|)."""
+        return self.n_routed / max(self.n_queries, 1)
+
+
+@dataclasses.dataclass
+class MetricIndex:
+    """Everything the query phase needs, with the build phase paid once.
+
+    All arrays are host numpy (the single-host serving path gathers verify
+    tiles from them; ``to_distributed`` device-puts the per-slot V buffers).
+    ``coords`` are R's mapped coordinates — the cached index-to-pivot
+    distances the pivot filter reuses on every query.
+    """
+
+    # -- build config (the manifest scalars) --------------------------------
+    metric: str
+    delta: float  # build-time default query radius
+    n_dims: int
+    tighten: bool
+    backend: str  # RESOLVED backend ("numpy" | "pallas") the build mapped with
+    prune: str  # requested prune mode ("pivot" | "none")
+    map_fused: bool
+    tile_v: int
+    tile_w: int
+    seed: int
+    placement_strategy: str
+    n_devices: int  # devices the stored placement plan targets
+
+    # -- build artifacts ----------------------------------------------------
+    data: np.ndarray  # (N, m) the indexed set R
+    coords: np.ndarray  # (N, n) R's mapped coordinates (pivot distances)
+    cells: np.ndarray  # (N,) kernel cell of each R row
+    pivots: np.ndarray  # (k, m) sampled pivots
+    anchors: np.ndarray  # (n, m) anchor pivots of the space map
+    kernel_lo: np.ndarray  # (p, n) half-open kernel boxes
+    kernel_hi: np.ndarray
+    box_lo: np.ndarray  # (p, n) PRE-expansion whole-box base (member MBB
+    box_hi: np.ndarray  # when tighten, else the kernel box); query boxes
+    #   are box ∓ query-δ — recomputed per batch, any radius answers exactly
+    placement: placement_lib.PlacementPlan
+    build_s: float = 0.0
+    node_confidences: np.ndarray | None = None
+
+    # -- derived query-phase caches (never persisted) -----------------------
+    _v_lists: list[np.ndarray] | None = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ api
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def k(self) -> int:
+        return int(self.pivots.shape[0])
+
+    @property
+    def p(self) -> int:
+        return int(self.kernel_lo.shape[0])
+
+    @property
+    def space_map(self) -> mapping.SpaceMap:
+        return mapping.SpaceMap(jnp.asarray(self.anchors), self.metric)
+
+    @property
+    def v_lists(self) -> list[np.ndarray]:
+        """Per-cell V row lists (global R indices), computed once per index."""
+        if self._v_lists is None:
+            order = np.argsort(self.cells, kind="stable")
+            bounds = np.searchsorted(self.cells[order], np.arange(self.p + 1))
+            self._v_lists = [
+                order[bounds[h] : bounds[h + 1]] for h in range(self.p)
+            ]
+        return self._v_lists
+
+    def query_boxes(self, delta: float) -> tuple[np.ndarray, np.ndarray]:
+        """The δ-expanded whole boxes for a given query radius — the exact
+        expression the build phase would have produced for that δ, so
+        ``delta == self.delta`` reproduces the join's boxes bit-for-bit."""
+        return (
+            (self.box_lo - np.float32(delta)).astype(np.float32),
+            (self.box_hi + np.float32(delta)).astype(np.float32),
+        )
+
+    def route(self, q: np.ndarray | Array, delta: float) -> tuple[np.ndarray, np.ndarray]:
+        """Map a query batch and route it to its owning cells.
+
+        Returns ``(q_coords (B, n), member (B, p))`` — the mapped
+        coordinates (reused by the pivot filter) and the whole-box
+        membership under the δ-expanded query boxes. Uses the same fused
+        map-assign kernel (and fp algorithm) as the build phase, so a
+        borderline query coordinate can never land on a different side of
+        a box edge than the indexed MBB implies.
+        """
+        q = jnp.asarray(q, jnp.float32)
+        wlo, whi = self.query_boxes(delta)
+        if q.shape[0] == 0:
+            return (
+                np.zeros((0, self.n_dims), np.float32),
+                np.zeros((0, self.p), bool),
+            )
+        if self.map_fused and kops.supports_kernel(self.metric):
+            qm, _, bits = kops.map_assign(
+                q, jnp.asarray(self.anchors),
+                jnp.asarray(self.kernel_lo), jnp.asarray(self.kernel_hi),
+                jnp.asarray(wlo), jnp.asarray(whi),
+                self.metric, backend=self.backend, want="member",
+            )
+            member = kops.unpack_membership(bits, self.p)
+        else:
+            qm = self.space_map(q)
+            member = (
+                (qm[:, None, :] >= jnp.asarray(wlo)[None])
+                & (qm[:, None, :] <= jnp.asarray(whi)[None])
+            ).all(-1)
+        return np.asarray(qm, np.float32), np.asarray(member, bool)
+
+    def query_batch(
+        self,
+        q: np.ndarray | Array,
+        delta: float | None = None,
+        *,
+        with_stats: bool = False,
+    ):
+        """Batched δ-range query: all pairs (i ∈ R, j ∈ Q) with
+        D(r_i, q_j) ≤ δ, as an (n_pairs, 2) int64 array (column 0 indexes
+        the indexed set, column 1 the query batch). ``delta=None`` uses the
+        build-time default. Fixed-seed results are byte-identical to
+        ``distances.brute_force_join(R, Q, delta)``.
+
+        No sampling, fitting or partitioning happens here — only the fused
+        map pass over Q and the tiled verify engine over the routed cells.
+        """
+        delta = self.delta if delta is None else float(delta)
+        q_np = np.asarray(q, np.float32)
+        t0 = time.perf_counter()
+        q_coords, member = self.route(q_np, delta)
+        w_lists = [np.flatnonzero(member[:, h]) for h in range(self.p)]
+        t_route = time.perf_counter() - t0
+
+        prune = verify_lib.resolve_prune(self.prune, self.metric, True)
+        cfg = verify_lib.EngineConfig(
+            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w,
+            prune=prune,
+        )
+        t0 = time.perf_counter()
+        pairs, vstats = verify_lib.verify_cell_lists(
+            self.data, self.cells, self.v_lists, w_lists, delta, self.metric,
+            config=cfg, data_w=q_np, coords=self.coords, coords_w=q_coords,
+        )
+        t_verify = time.perf_counter() - t0
+        if not with_stats:
+            return pairs
+        touched = sum(1 for w in w_lists if w.size)
+        stats = QueryStats(
+            n_queries=int(q_np.shape[0]),
+            n_routed=int(member.sum()),
+            n_cells_touched=touched,
+            route_s=t_route,
+            verify_s=t_verify,
+            verify=vstats,
+        )
+        return pairs, stats
+
+    def query(self, q: np.ndarray | Array, delta: float | None = None) -> np.ndarray:
+        """Single-point δ-range query: sorted R row indices within δ of ``q``."""
+        q = np.asarray(q, np.float32)
+        if q.ndim != 1:
+            raise ValueError(f"query() takes one point (m,); got shape {q.shape}")
+        pairs = self.query_batch(q[None, :], delta)
+        return np.sort(pairs[:, 0])
+
+    # ----------------------------------------------------------- distributed
+
+    def to_distributed(self, mesh, axis: str = "data") -> "DistIndex":
+        """Pin the per-slot V buffers on ``mesh`` and serve query batches
+        through the distributed verify-stage slot machinery (one W-side
+        ``all_to_all`` per batch, no R bytes moved after this call).
+
+        Re-plans placement (cheap — a static permutation from the stored
+        cost-model loads) when the mesh size differs from the plan's
+        ``n_devices``; never re-samples or re-partitions.
+        """
+        from repro.core import distributed as dist_lib
+
+        return dist_lib.DistIndex.from_index(self, mesh, axis=axis)
+
+    # ------------------------------------------------------------- save/load
+
+    def manifest(self) -> dict:
+        """The JSON manifest (format + config + shapes + placement summary)."""
+        return {
+            "format": FORMAT_NAME,
+            "version": FORMAT_VERSION,
+            "metric": self.metric,
+            "delta": float(self.delta),
+            "k": self.k,
+            "p": self.p,
+            "n_dims": self.n_dims,
+            "n_rows": self.n_rows,
+            "n_features": self.n_features,
+            "tighten": bool(self.tighten),
+            "backend": self.backend,
+            "prune": self.prune,
+            "map_fused": bool(self.map_fused),
+            "tile_v": self.tile_v,
+            "tile_w": self.tile_w,
+            "seed": self.seed,
+            "build_s": float(self.build_s),
+            "placement": {
+                "strategy": self.placement.strategy,
+                "n_devices": self.placement.n_devices,
+                "n_slots": self.placement.n_slots,
+                "certified_bound": float(self.placement.certified_bound),
+            },
+            "arrays": {name: list(getattr(self, name).shape) for name in _ARRAYS},
+        }
+
+    def save(self, path: str) -> str:
+        """Write the versioned on-disk format: ``path/manifest.json`` +
+        ``path/arrays.npz`` (all arrays bit-exact). Returns ``path``."""
+        os.makedirs(path, exist_ok=True)
+        arrays = {name: np.asarray(getattr(self, name)) for name in _ARRAYS}
+        for name in _PLAN_ARRAYS:
+            arrays[f"pl_{name}"] = np.asarray(getattr(self.placement, name))
+        if self.node_confidences is not None:
+            arrays["node_confidences"] = np.asarray(self.node_confidences)
+        np.savez(os.path.join(path, "arrays.npz"), **arrays)
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(self.manifest(), f, indent=2, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(
+        cls,
+        path: str,
+        *,
+        metric: str | None = None,
+        delta: float | None = None,
+        k: int | None = None,
+    ) -> "MetricIndex":
+        """Load an index, failing loudly instead of mis-answering.
+
+        Format checks (``IndexFormatError``): missing/foreign manifest, a
+        version this code does not speak, manifest/array shape disagreement.
+        Config checks (``IndexMismatchError``): when the caller states the
+        ``metric`` / ``delta`` / pivot count ``k`` its queries assume, any
+        disagreement with the manifest raises with both values named.
+        """
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            raise IndexFormatError(f"no metric-index manifest at {mpath}")
+        with open(mpath) as f:
+            man = json.load(f)
+        if man.get("format") != FORMAT_NAME:
+            raise IndexFormatError(
+                f"{mpath} is not a {FORMAT_NAME!r} artifact "
+                f"(format={man.get('format')!r})"
+            )
+        version = man.get("version")
+        if version != FORMAT_VERSION:
+            raise IndexFormatError(
+                f"index format version {version!r} is not supported by this "
+                f"build (speaks version {FORMAT_VERSION}); re-save the index "
+                f"with a matching version of the code"
+            )
+        if metric is not None and metric != man["metric"]:
+            raise IndexMismatchError(
+                f"index was built for metric {man['metric']!r} but the query "
+                f"config expects {metric!r} — distances would be silently "
+                f"wrong; rebuild the index for {metric!r}"
+            )
+        if delta is not None and not np.isclose(delta, man["delta"]):
+            raise IndexMismatchError(
+                f"index default delta is {man['delta']} but the query config "
+                f"expects {delta} — pass delta= per query_batch() call for a "
+                f"different radius, or rebuild to change the default"
+            )
+        if k is not None and k != man["k"]:
+            raise IndexMismatchError(
+                f"index holds {man['k']} pivots but the query config expects "
+                f"k={k} — the partition plan would not match; rebuild"
+            )
+
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {name: z[name] for name in z.files}
+        missing = [n for n in _ARRAYS if n not in arrays]
+        if missing:
+            raise IndexFormatError(f"arrays.npz is missing {missing}")
+        for name, shape in man["arrays"].items():
+            got = list(arrays[name].shape)
+            if got != shape:
+                raise IndexFormatError(
+                    f"manifest says {name} has shape {shape} but arrays.npz "
+                    f"holds {got} — artifact is corrupt or mixed between saves"
+                )
+        if int(man["k"]) != arrays["pivots"].shape[0]:
+            raise IndexFormatError(
+                f"manifest pivot count k={man['k']} disagrees with the stored "
+                f"pivots array ({arrays['pivots'].shape[0]} rows)"
+            )
+
+        pman = man["placement"]
+        loads = arrays["pl_cell_loads"]
+        plan = placement_lib.PlacementPlan(
+            strategy=pman["strategy"],
+            n_devices=int(pman["n_devices"]),
+            p=int(man["p"]),
+            n_slots=int(pman["n_slots"]),
+            cell_loads=loads,
+            cell_first_slot=arrays["pl_cell_first_slot"],
+            cell_n_slabs=arrays["pl_cell_n_slabs"],
+            slot_cell=arrays["pl_slot_cell"],
+            slot_slab=arrays["pl_slot_slab"],
+            slot_load=arrays["pl_slot_load"],
+            dispatch_of_slot=arrays["pl_dispatch_of_slot"],
+            certified_bound=float(pman["certified_bound"]),
+        )
+        return cls(
+            metric=man["metric"],
+            delta=float(man["delta"]),
+            n_dims=int(man["n_dims"]),
+            tighten=bool(man["tighten"]),
+            backend=man["backend"],
+            prune=man["prune"],
+            map_fused=bool(man["map_fused"]),
+            tile_v=int(man["tile_v"]),
+            tile_w=int(man["tile_w"]),
+            seed=int(man["seed"]),
+            placement_strategy=pman["strategy"],
+            n_devices=int(pman["n_devices"]),
+            data=arrays["data"],
+            coords=arrays["coords"],
+            cells=arrays["cells"],
+            pivots=arrays["pivots"],
+            anchors=arrays["anchors"],
+            kernel_lo=arrays["kernel_lo"],
+            kernel_hi=arrays["kernel_hi"],
+            box_lo=arrays["box_lo"],
+            box_hi=arrays["box_hi"],
+            placement=plan,
+            build_s=float(man.get("build_s", 0.0)),
+            node_confidences=arrays.get("node_confidences"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The build phase
+# ---------------------------------------------------------------------------
+
+
+def _base_boxes(
+    plan: partition.PartitionPlan,
+    x_mapped: Array,
+    cells: Array,
+    tighten: bool,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pre-expansion whole-box base: the member MBB of each cell (the same
+    segment min/max expression ``partition.tighten`` uses, so expanding by
+    the build δ reproduces the join's whole boxes bit-for-bit), or the
+    kernel box when tightening is off. Empty cells collapse to the inverted
+    (BIG, −BIG) box — no query radius can ever route into them."""
+    if not tighten:
+        return np.asarray(plan.kernel_lo), np.asarray(plan.kernel_hi)
+    p = plan.p
+    seg_min = jax.ops.segment_min(x_mapped, cells, num_segments=p)
+    seg_max = jax.ops.segment_max(x_mapped, cells, num_segments=p)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(cells, jnp.float32), cells, num_segments=p
+    )
+    empty = counts == 0
+    lo = jnp.where(empty[:, None], partition.BIG, seg_min)
+    hi = jnp.where(empty[:, None], -partition.BIG, seg_max)
+    return np.asarray(lo, np.float32), np.asarray(hi, np.float32)
+
+
+def build_index(
+    data: np.ndarray | Array,
+    cfg: spjoin.JoinConfig,
+    *,
+    n_nodes: int = 4,
+    n_devices: int | None = None,
+) -> MetricIndex:
+    """Run the build phase ONCE: sampling → anchors → partition boxes →
+    member MBBs → LPT placement plan → cached coordinates and V lists.
+
+    ``data`` is the indexed set R (full array or per-node shard list, as for
+    ``spjoin.join``); ``cfg`` carries the same knobs the join uses (δ becomes
+    the default query radius). ``n_devices`` sizes the stored placement plan
+    (default: ``n_nodes``) — ``to_distributed`` re-plans cheaply when the
+    serving mesh differs.
+
+    The exact same control-plane helpers as ``spjoin.join`` run here
+    (``fit_node_stats`` → ``draw_pivots`` → ``build_plan``), so a fixed seed
+    yields the identical partition geometry the one-shot join would use.
+    """
+    t_start = time.perf_counter()
+    key = jax.random.PRNGKey(cfg.seed)
+    shards = spjoin._as_shards(data, n_nodes)
+    allx = jnp.concatenate(shards, axis=0) if shards else jnp.asarray(data)
+
+    # ---- sampling phase (once, at build) ---------------------------------
+    k_sample, k_anchor = jax.random.split(key)
+    node_stats = spjoin.fit_node_stats(shards, cfg.t_cells)
+    pivots = spjoin.draw_pivots(k_sample, shards, node_stats, cfg)
+
+    # ---- map-phase control plane (once, at build) ------------------------
+    plan, smap = spjoin.build_plan(k_anchor, pivots, cfg)
+    fused = cfg.map_fused and kops.supports_kernel(cfg.metric)
+    backend = (
+        kops.resolve_backend(cfg.backend, cfg.metric)
+        if kops.supports_kernel(cfg.metric)
+        else "numpy"
+    )
+    if fused:
+        x_mapped, cells, _ = kops.map_assign(
+            allx, smap.anchors, plan.kernel_lo, plan.kernel_hi,
+            plan.whole_lo, plan.whole_hi, cfg.metric, backend=backend,
+            want="cells",
+        )
+    else:
+        x_mapped = smap(allx)
+        cells = partition.assign_kernel(plan, x_mapped)
+    box_lo, box_hi = _base_boxes(plan, x_mapped, cells, cfg.tighten)
+
+    # ---- placement plan (cost-model loads from the pivots alone) ---------
+    n_dev = int(n_devices or max(len(shards), 1))
+    piv_mapped = np.asarray(smap(pivots), np.float32)
+    piv_plan = partition.PartitionPlan(
+        plan.kernel_lo, plan.kernel_hi,
+        jnp.asarray(box_lo - np.float32(cfg.delta)),
+        jnp.asarray(box_hi + np.float32(cfg.delta)),
+        cfg.delta,
+    )
+    piv_cells = np.asarray(partition.assign_kernel(piv_plan, jnp.asarray(piv_mapped)))
+    piv_member = np.asarray(
+        partition.whole_membership(piv_plan, jnp.asarray(piv_mapped))
+    )
+    prune_active = verify_lib.resolve_prune(cfg.prune, cfg.metric, True) == "pivot"
+    cell_loads, _, _, _ = placement_lib.planner_inputs(
+        piv_mapped, piv_cells, piv_member,
+        int(allx.shape[0]), int(allx.shape[0]), cfg.delta, prune_active,
+    )
+    pl = placement_lib.plan_placement(cell_loads, n_dev, strategy=cfg.placement)
+
+    idx = MetricIndex(
+        metric=cfg.metric,
+        delta=float(cfg.delta),
+        n_dims=int(smap.n_dims),
+        tighten=bool(cfg.tighten),
+        backend=backend,
+        prune=cfg.prune,
+        map_fused=bool(fused),
+        tile_v=cfg.tile_v,
+        tile_w=cfg.tile_w,
+        seed=cfg.seed,
+        placement_strategy=cfg.placement,
+        n_devices=n_dev,
+        data=np.asarray(allx, np.float32),
+        coords=np.asarray(x_mapped, np.float32),
+        cells=np.asarray(cells, np.int32),
+        pivots=np.asarray(pivots, np.float32),
+        anchors=np.asarray(smap.anchors, np.float32),
+        kernel_lo=np.asarray(plan.kernel_lo, np.float32),
+        kernel_hi=np.asarray(plan.kernel_hi, np.float32),
+        box_lo=box_lo,
+        box_hi=box_hi,
+        placement=pl,
+        node_confidences=np.array([st.confidence for st in node_stats]),
+    )
+    idx.build_s = time.perf_counter() - t_start
+    return idx
+
+
+def brute_force_query(
+    index_data: np.ndarray, q: np.ndarray, delta: float, metric: str
+) -> np.ndarray:
+    """Oracle for tests/benchmarks: (i ∈ R, j ∈ Q) pairs from the dense
+    cross-distance matrix — the parity target of ``query_batch``."""
+    mask = np.asarray(
+        distances.brute_force_join(
+            jnp.asarray(index_data), jnp.asarray(q), delta, metric
+        )
+    )
+    i, j = np.nonzero(mask)
+    return np.stack([i, j], axis=1).astype(np.int64)

@@ -11,6 +11,13 @@ Mesh semantics:
 "data" (+"pod") carries batch/FSDP and is the SP-Join "local node" axis;
 "model" carries TP/EP. The pod axis crosses DCN: only data-parallel
 gradient all-reduces (and nothing latency-sensitive) traverse it.
+
+Serving: ``make_host_mesh`` is the mesh entry point of the query-serving
+path (docs/SERVING.md) — ``MetricIndex.to_distributed(make_host_mesh())``
+pins the per-slot V buffers over the "data" axis and every
+``query_batch`` moves only query bytes (one W-side all_to_all). Runnable:
+``python -m repro.launch.serve range``. ``HardwareModel``/``V5E`` are the
+roofline denominators ``benchmarks/roofline.py`` renders.
 """
 from __future__ import annotations
 
@@ -28,7 +35,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data") -> Mesh:
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """1-D mesh over whatever devices exist — the serving-path default
+    (``MetricIndex.to_distributed`` shards V buffers over ``axis``) and the
+    tests/examples mesh. ``n=None`` takes every visible device."""
     n = n or len(jax.devices())
     return jax.make_mesh((n,), (axis,))
 
