@@ -93,6 +93,7 @@ def _fit_all_families(x: Array, valid: Array, t_cells: int, backend: str):
         expected = jnp.maximum(n_eff / t_cells, 1e-9)
         k_star = (((nu - expected) ** 2) / expected).sum()
         m = x.shape[-1]
+        # spjoin-lint: allow[host-sync] -- all Python ints (shape dim + static config), no tracer is concretized
         dof = jnp.maximum(float(m * (t_cells - params.n_params - 1)), 1.0)
         conf = gof.chi2_sf(k_star, dof)
         if fam in ("exponential", "gamma"):

@@ -213,6 +213,10 @@ def verify_tile(
     so they can never disagree; None falls back to the scale-free band.
     """
     if prune == "pivot":
+        # resolve_prune guarantees coords are present in pivot mode; the
+        # assert narrows `Array | None` for the type checker at zero trace
+        # cost (it runs on static Python values, not tracers).
+        assert pv is not None and pw is not None, 'prune="pivot" without coords'
         if backend == "pallas":
             # Fused kernel recomputes the (cheap, VPU) bound in-block — that
             # is what lets it skip the MXU/VPU exact work per pruned block.
@@ -303,13 +307,13 @@ def prune_band(
     sets; None entries skipped): ``ref.prune_delta`` fed with the joint
     coordinate magnitude and feature count. One value per join, shared by
     every mask so the filter is self-consistent."""
-    x_abs = 0.0
-    n_feat = 0
-    for a in arrays:
-        if a is None or a.shape[0] == 0:
-            continue
-        x_abs = max(x_abs, float(jnp.max(jnp.abs(a))))
-        n_feat = max(n_feat, int(a.shape[1]))
+    live = [a for a in arrays if a is not None and a.shape[0] > 0]
+    if not live:
+        return ref.prune_delta(delta, metric, 0.0, 0)
+    # One device->host sync for the whole join, after every per-array max
+    # has been enqueued — not one blocking float() per array.
+    x_abs = float(jnp.max(jnp.stack([jnp.max(jnp.abs(a)) for a in live])))
+    n_feat = max(int(a.shape[1]) for a in live)
     return ref.prune_delta(delta, metric, x_abs, n_feat)
 
 
@@ -412,8 +416,9 @@ def verify_cell_lists(
     chunks: list[np.ndarray] = []
 
     for h, (v_idx, w_idx) in enumerate(zip(v_lists, w_lists)):
+        # spjoin-lint: allow[host-sync] -- index lists arrive as host arrays/lists; once per CELL, not per tile
         v_idx = np.asarray(v_idx)
-        w_idx = np.asarray(w_idx)
+        w_idx = np.asarray(w_idx)  # spjoin-lint: allow[host-sync] -- same: host-side cell index normalization
         if v_idx.size == 0 or w_idx.size == 0:
             continue
         stats.n_cells += 1
@@ -445,6 +450,7 @@ def verify_cell_lists(
                         pv, pw, vids, wids, delta=float(delta),
                         delta_bound=delta_bound,
                     )
+                    # spjoin-lint: allow[host-sync] -- the whole-tile skip decision IS a sync: O(tile*n) bound read back to elide the O(tile*m) kernel
                     n_cand = int(np.asarray(cand_dev).sum())
                     stats.n_pruned += n_valid - n_cand
                     if n_cand == 0:
@@ -457,6 +463,7 @@ def verify_cell_lists(
                 stats.n_padded += cap_v * cap_w
                 stats.n_dispatched += n_valid
                 stats.bucket_shapes.add((cap_v, cap_w))
+                # spjoin-lint: allow[host-sync] -- tile result must land on host to be compacted into (i, j) pairs; one readback per dispatched tile by design
                 mask = np.asarray(
                     _tile_verify(
                         xv, xw, vids, wids, wc, h,

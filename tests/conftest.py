@@ -21,6 +21,11 @@ except ModuleNotFoundError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:
+    import spjoin_lint  # noqa: F401  — the contract linter lives in tools/
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:
     sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))

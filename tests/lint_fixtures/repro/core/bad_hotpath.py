@@ -1,0 +1,57 @@
+"""Known-violating fixture for spjoin-lint's AST rules.
+
+This module is NEVER imported or executed — it exists so tests/test_lint.py
+can assert that each rule actually fires. Every violation below is
+deliberate. Its path contains ``repro/core/`` so the core-scoped rules
+(pallas-confined, traced-scope host-sync/f64) apply.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# pallas-confined: core/ may not import raw kernel modules or pallas itself.
+from repro.kernels import pairdist  # noqa: F401
+from jax.experimental import pallas as pl  # noqa: F401
+
+
+@jax.jit
+def traced_sync(x):
+    # host-sync (traced): np.asarray on a tracer is a trace-time transfer.
+    host = np.asarray(x)
+    # host-sync (traced): .item() blocks on the device.
+    first = x[0].item()
+    # host-sync (traced): float() concretizes the tracer.
+    scale = float(jnp.max(x))
+    return host.sum() + first + scale
+
+
+@jax.jit
+def traced_control(x):
+    # dyn-control: Python `if` over a traced value.
+    if jnp.sum(x) > 0:
+        x = x * 2
+    # dyn-control: conditional expression over a traced value.
+    y = x if jnp.any(x > 1) else -x
+    # f64-cast (traced scope): explicit float64 promotion.
+    return y.astype(jnp.float64)
+
+
+def rogue_collective(x):
+    # collective-site: all_to_all outside the blessed _make_exchange factory.
+    return jax.lax.all_to_all(x, "data", 0, 0)
+
+
+def helper_calls_traced(x):
+    return traced_sync(x)
+
+
+# Waiver-hygiene fixtures ---------------------------------------------------
+
+# spjoin-lint: allow[made-up-rule] -- the rule name does not exist
+A = 1
+
+# spjoin-lint: allow[host-sync]
+B = 2
+
+# spjoin-lint: allow[f64-cast] -- nothing on the next line violates f64-cast
+C = 3

@@ -1,0 +1,31 @@
+"""Clean fixture: everything here must pass every spjoin-lint rule.
+
+Never imported; parsed only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops  # blessed: the dispatch layer
+
+
+@jax.jit
+def traced_clean(x, y):
+    d = jnp.abs(x[:, None, :] - y[None, :, :]).sum(-1)
+    mask = jnp.where(d <= 1.0, 1.0, 0.0)
+    return mask.astype(jnp.float32)
+
+
+def host_driver(xs):
+    # Host code outside any hot scope: syncs here are fine.
+    total = 0.0
+    arr = np.asarray(xs)
+    for row in arr:
+        total += float(row.sum())
+    return total, ops
+
+
+def static_shapes_only(x, n: int):
+    # int() over a static Python value, not a tracer.
+    k = int(n) * 2
+    return jnp.zeros((k,), jnp.float32) + x.sum()

@@ -1,0 +1,28 @@
+"""Stream-tier fixture: named ``repro/core/verify.py`` so the config's
+STREAM_SCOPES tiers apply to ``verify_pairs``. Never imported; parsed only.
+
+The stream tier flags syncs only INSIDE loop bodies — the pre-loop sync
+below must NOT fire, the in-loop ones must.
+"""
+import numpy as np
+
+
+def verify_pairs(tiles, data):
+    # Fine: one normalization before the loop starts.
+    data = np.asarray(data)
+    out = []
+    for t in tiles:
+        # host-sync (stream): a device->host transfer per tile stalls the
+        # pipeline the streaming engine exists to keep full.
+        mask = np.asarray(t)
+        # host-sync (stream): int() over a jnp expression syncs per tile.
+        import jax.numpy as jnp
+
+        n = int(jnp.sum(t))
+        out.append((mask, n))
+    return out
+
+
+def cold_helper(xs):
+    # Not a configured stream scope: free to sync anywhere.
+    return [np.asarray(x) for x in xs]

@@ -1,0 +1,46 @@
+"""Known-violating fixture for the dispatch-triad and module-wide f64 rules.
+
+Never imported; parsed only. The path ends in ``repro/kernels/ops.py`` so
+the triad rule applies, and lives under ``repro/kernels/`` so the f64 rule
+is module-wide.
+"""
+import numpy as np
+
+from repro.kernels import pairdist as _pairdist
+from repro.kernels import ref
+
+
+def resolve_backend(backend="auto"):
+    return "numpy" if backend == "auto" else backend
+
+
+def complete_op(x, y, *, backend="auto"):
+    """All three legs: dispatch arm + ref oracle + pallas kernel."""
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        return _pairdist.pairdist_kernel(x, y)
+    return ref.pairdist(x, y, "l2")
+
+
+def missing_pallas(x, y, *, backend="auto"):
+    """Has dispatch + ref but never reaches a kernel-module call."""
+    backend = resolve_backend(backend)
+    return ref.pairdist(x, y, "l2")
+
+
+def missing_everything(x, y, *, backend="auto"):
+    """Takes backend= but implements a single hardwired path."""
+    return abs(x - y)
+
+
+def delegating_op(x, y, *, backend="auto"):
+    """Triad satisfied transitively via same-module delegation."""
+    return complete_op(x, y, backend=backend)
+
+
+def f64_scratch(x):
+    # f64-cast (module-wide in kernels/): three spellings of the promotion.
+    a = np.zeros(4, np.float64)
+    b = x.astype(float)
+    c = np.arange(4, dtype=float)
+    return a, b, c

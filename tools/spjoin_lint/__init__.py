@@ -1,0 +1,19 @@
+"""spjoin-lint: two-layer static analysis for the SP-Join repro.
+
+Layer 1 (``astlint``/``rules``): AST rules over ``src/repro/core`` and
+``src/repro/kernels`` — host-sync hygiene, dispatch-triad completeness,
+f64 confinement, data-dependent control flow, blessed collective sites,
+kernel-layer confinement, waiver hygiene.
+
+Layer 2 (``jaxpr_audit``): traces every jitted public entry point with
+abstract shapes and pins its contract surface (collective counts, zero f64
+casts, static output shapes, recompile budget) into ``runs/contracts.json``,
+diffed against a committed baseline in CI.
+
+Run ``python -m spjoin_lint src/`` (AST layer) or add ``--audit`` for both.
+"""
+from __future__ import annotations
+
+__version__ = "0.1.0"
+
+from spjoin_lint.astlint import Violation, lint_file, lint_paths  # noqa: E402,F401

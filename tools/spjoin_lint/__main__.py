@@ -1,0 +1,3 @@
+from spjoin_lint.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""Command-line entry point: ``python -m spjoin_lint [paths...]``.
+
+Exit status 0 means every contract holds; 1 means violations (printed one
+per line, ``file:line: [rule] message``). ``--audit`` additionally runs the
+jaxpr trace auditor and writes ``runs/contracts.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _repo_root() -> str:
+    # tools/spjoin_lint/cli.py -> repo root is two levels up from the package.
+    return os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _ensure_import_paths() -> None:
+    """Make ``repro`` importable when run from a source checkout."""
+    src = os.path.join(_repo_root(), "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="spjoin-lint",
+        description="SP-Join contract linter: AST rules + jaxpr trace audit.",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help="files or directories to lint (default: <repo>/src)",
+    )
+    parser.add_argument(
+        "--audit", action="store_true",
+        help="also run the jaxpr trace auditor (imports jax + repro)",
+    )
+    parser.add_argument(
+        "--audit-only", action="store_true",
+        help="run only the jaxpr trace auditor, skip the AST layer",
+    )
+    parser.add_argument(
+        "--contracts-out", default=None, metavar="PATH",
+        help="where the auditor writes its report (default: <repo>/runs/contracts.json)",
+    )
+    parser.add_argument(
+        "--baseline", default=None, metavar="PATH",
+        help="baseline to diff against (default: tools/spjoin_lint/contracts_baseline.json)",
+    )
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="rewrite the committed baseline from this run instead of diffing",
+    )
+    args = parser.parse_args(argv)
+
+    root = _repo_root()
+    paths = args.paths or [os.path.join(root, "src")]
+    failed = False
+
+    if not args.audit_only:
+        from spjoin_lint.astlint import lint_paths
+
+        violations, n_waivers = lint_paths(paths)
+        for v in violations:
+            print(v.format())
+        n_files = sum(1 for p in paths for _ in _walk_py(p))
+        print(
+            f"spjoin-lint [ast]: {len(violations)} violation(s) across "
+            f"{n_files} file(s) in scope ({n_waivers} waiver(s) in use)"
+        )
+        failed |= bool(violations)
+
+    if args.audit or args.audit_only:
+        _ensure_import_paths()
+        from spjoin_lint.jaxpr_audit import run_audit
+
+        out = args.contracts_out or os.path.join(root, "runs", "contracts.json")
+        baseline = args.baseline or os.path.join(
+            root, "tools", "spjoin_lint", "contracts_baseline.json"
+        )
+        contracts, problems = run_audit(
+            out_path=out, baseline_path=baseline,
+            write_baseline=args.write_baseline,
+        )
+        for p in problems:
+            print(f"contracts: {p}")
+        print(
+            f"spjoin-lint [jaxpr]: {len(contracts['entries'])} entry point(s) "
+            f"traced, {len(problems)} problem(s); report at {out}"
+        )
+        failed |= bool(problems)
+
+    return 1 if failed else 0
+
+
+def _walk_py(path: str):
+    from spjoin_lint.astlint import iter_lint_files
+
+    yield from iter_lint_files([path])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

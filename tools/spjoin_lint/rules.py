@@ -1,0 +1,445 @@
+"""The AST rules. Each takes a ModuleIndex and yields Violations.
+
+Rule catalogue (rationale + examples in docs/INVARIANTS.md):
+
+  host-sync        no ``np.asarray`` / ``.item()`` / ``.block_until_ready()``
+                   / ``jax.device_get`` / ``int()``-on-tracer in hot scopes.
+                   Traced tier: flagged anywhere. Stream tier: flagged inside
+                   ``for``/``while`` bodies (per-tile syncs stall the stream).
+  dispatch-triad   every public ``backend=``-dispatched op in kernels/ops.py
+                   must reach a ref.py oracle, a Pallas kernel module, and
+                   ``resolve_backend`` (directly or through same-module
+                   delegation).
+  f64-cast         no float64 (or weak-f64 ``dtype=float``) in kernel paths.
+  dyn-control      no ``if``/``while``/``for`` on values computed by jnp/jax
+                   inside a traced scope (data-dependent Python control flow
+                   either crashes the trace or silently bakes one branch in).
+  collective-site  communication primitives only at the blessed sites
+                   (the ``_make_exchange`` shuffle factory; the stats/counts
+                   gathers).
+  pallas-confined  core/ imports the kernels package only through ``ops`` /
+                   ``ref`` — never the raw kernel modules or pallas itself.
+  waiver-hygiene   every waiver names a real rule, carries a justification,
+                   suppresses something, and the global count is ratcheted.
+"""
+from __future__ import annotations
+
+import ast
+
+from spjoin_lint import config
+from spjoin_lint.astlint import (
+    FuncInfo,
+    ModuleIndex,
+    Violation,
+    _attr_tail,
+    _root_name,
+    scope_walk,
+)
+
+_NP_NAMES = frozenset({"np", "numpy"})
+_JNP_NAMES = frozenset({"jnp", "jax"})
+
+
+def _is_np_call(node: ast.Call, funcs: frozenset) -> bool:
+    return (
+        isinstance(node.func, ast.Attribute)
+        and node.func.attr in funcs
+        and _root_name(node.func) in _NP_NAMES
+    )
+
+
+# jax.* utilities that return host Python values, not tracers — control flow
+# over these is configuration, not data dependence.
+_JAX_HOST_UTILS = frozenset(
+    {"default_backend", "device_count", "local_device_count", "devices",
+     "local_devices", "process_index", "process_count"}
+)
+
+
+def _is_jnp_rooted_call(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and _root_name(node.func) in _JNP_NAMES
+        and node.func.attr not in _JAX_HOST_UTILS
+    )
+
+
+def _contains_jnp_call(node: ast.AST) -> bool:
+    return any(_is_jnp_rooted_call(n) for n in ast.walk(node))
+
+
+def _sync_violation(idx: ModuleIndex, node: ast.Call, fi: FuncInfo) -> str | None:
+    """Return a message when ``node`` is a host-sync construct, else None."""
+    f = node.func
+    if _is_np_call(node, config.SYNC_NP_FUNCS):
+        return f"{_root_name(f)}.{f.attr}() forces a device->host transfer"
+    if isinstance(f, ast.Attribute) and f.attr in config.SYNC_METHODS:
+        return f".{f.attr}() blocks on the device"
+    if (
+        isinstance(f, ast.Attribute)
+        and f.attr in config.SYNC_JAX_FUNCS
+        and _root_name(f) in _JNP_NAMES
+    ):
+        return f"jax.{f.attr}() forces a device->host transfer"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+
+def check_host_sync(idx: ModuleIndex):
+    for fi in idx.functions.values():
+        if fi.tier == "traced":
+            yield from _host_sync_traced(idx, fi)
+        elif fi.tier == "stream":
+            yield from _host_sync_stream(idx, fi)
+
+
+def _host_sync_traced(idx: ModuleIndex, fi: FuncInfo):
+    for node in scope_walk(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        msg = _sync_violation(idx, node, fi)
+        if msg:
+            yield Violation(
+                idx.relpath, node.lineno, "host-sync",
+                f"{msg} inside traced scope `{fi.qualname}`",
+            )
+            continue
+        # int()/float()/bool() on anything but a static argname or constant
+        # concretizes a tracer.
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in ("int", "float", "bool")
+            and node.args
+        ):
+            arg = node.args[0]
+            ok = isinstance(arg, ast.Constant) or (
+                isinstance(arg, ast.Name) and arg.id in fi.static_args
+            )
+            if not ok:
+                yield Violation(
+                    idx.relpath, node.lineno, "host-sync",
+                    f"{node.func.id}() on a non-static value inside traced "
+                    f"scope `{fi.qualname}` concretizes the tracer",
+                )
+
+
+def _host_sync_stream(idx: ModuleIndex, fi: FuncInfo):
+    # Only loop bodies: a per-tile/per-cell sync serializes the stream.
+    loops = [
+        n
+        for n in scope_walk(fi.node)
+        if isinstance(n, (ast.For, ast.While, ast.AsyncFor))
+    ]
+    seen: set[int] = set()
+    for loop in loops:
+        for node in ast.walk(loop):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            seen.add(id(node))
+            msg = _sync_violation(idx, node, fi)
+            if msg:
+                yield Violation(
+                    idx.relpath, node.lineno, "host-sync",
+                    f"{msg} inside the hot loop of stream scope "
+                    f"`{fi.qualname}`",
+                )
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("int", "float", "bool")
+                and node.args
+                and _contains_jnp_call(node.args[0])
+            ):
+                yield Violation(
+                    idx.relpath, node.lineno, "host-sync",
+                    f"{node.func.id}() over a jnp expression inside the hot "
+                    f"loop of stream scope `{fi.qualname}` syncs per "
+                    f"iteration",
+                )
+
+
+# ---------------------------------------------------------------------------
+# dispatch-triad
+# ---------------------------------------------------------------------------
+
+
+def _kernel_aliases(tree: ast.Module) -> tuple[set, set]:
+    """(ref aliases, raw kernel-module aliases) from the import statements."""
+    ref_alias, kern_alias = set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and (
+            node.module == "repro.kernels" or node.module.endswith(".kernels")
+        ):
+            for a in node.names:
+                name = a.asname or a.name
+                if a.name == "ref":
+                    ref_alias.add(name)
+                elif a.name in config.RAW_KERNEL_MODULES:
+                    kern_alias.add(name)
+    return ref_alias, kern_alias
+
+
+def check_dispatch_triad(idx: ModuleIndex):
+    if not any(idx.relpath.endswith(m) for m in config.TRIAD_MODULES):
+        return
+    tree = idx.tree
+    ref_alias, kern_alias = _kernel_aliases(tree)
+
+    defs = {name: fi.node for name, fi in idx.module_scope.items()}
+    effects: dict[str, set] = {}
+    calls: dict[str, set] = {}
+    for name, fn in defs.items():
+        eff, callees = set(), set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                root = _root_name(f)
+                if root in ref_alias:
+                    eff.add("ref")
+                elif root in kern_alias:
+                    eff.add("pallas")
+                elif f.attr == "resolve_backend":
+                    eff.add("dispatch")
+            elif isinstance(f, ast.Name):
+                if f.id == "resolve_backend":
+                    eff.add("dispatch")
+                elif f.id in defs:
+                    callees.add(f.id)
+        effects[name] = eff
+        calls[name] = callees
+
+    # Same-module delegation closes the triad (pairdist_count -> pairdist_mask).
+    changed = True
+    while changed:
+        changed = False
+        for name in defs:
+            for callee in calls[name]:
+                merged = effects[name] | effects[callee]
+                if merged != effects[name]:
+                    effects[name] = merged
+                    changed = True
+
+    legs = {
+        "ref": "a ref.py oracle call (the numpy backend / parity oracle)",
+        "pallas": "a Pallas kernel-module call (the accelerator backend)",
+        "dispatch": "a resolve_backend() dispatch arm",
+    }
+    for name, fn in defs.items():
+        if name.startswith("_"):
+            continue
+        args = fn.args
+        kwonly = {a.arg for a in args.kwonlyargs}
+        if "backend" not in kwonly:
+            continue
+        missing = [leg for leg in ("ref", "pallas", "dispatch") if leg not in effects[name]]
+        for leg in missing:
+            yield Violation(
+                idx.relpath, fn.lineno, "dispatch-triad",
+                f"public op `{name}` takes backend= but never reaches "
+                f"{legs[leg]} (directly or via same-module delegation)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# f64-cast
+# ---------------------------------------------------------------------------
+
+
+def _f64_violations(idx: ModuleIndex, nodes, where: str):
+    for node in nodes:
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            root = _root_name(node)
+            if root in _NP_NAMES | _JNP_NAMES:
+                yield Violation(
+                    idx.relpath, node.lineno, "f64-cast",
+                    f"{root}.float64 in {where} — kernel paths are f32; f64 "
+                    f"doubles HBM traffic and detunes the MXU",
+                )
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "astype" and node.args:
+                a = node.args[0]
+                if (isinstance(a, ast.Name) and a.id == "float") or (
+                    isinstance(a, ast.Constant) and a.value == "float64"
+                ):
+                    yield Violation(
+                        idx.relpath, node.lineno, "f64-cast",
+                        f".astype({ast.unparse(a)}) in {where} promotes to "
+                        f"float64 (python float == f64)",
+                    )
+            for kw in node.keywords:
+                if kw.arg == "dtype" and isinstance(kw.value, ast.Name) and (
+                    kw.value.id == "float"
+                ):
+                    yield Violation(
+                        idx.relpath, node.lineno, "f64-cast",
+                        f"dtype=float in {where} is a weak-typed f64 "
+                        f"promotion; spell the f32 dtype explicitly",
+                    )
+
+
+def check_f64_cast(idx: ModuleIndex):
+    module_wide = any(root in idx.relpath for root in config.F64_MODULE_WIDE)
+    if module_wide:
+        yield from _f64_violations(idx, ast.walk(idx.tree), "a kernel module")
+        return
+    for fi in idx.functions.values():
+        if fi.tier == "traced":
+            yield from _f64_violations(
+                idx, scope_walk(fi.node), f"traced scope `{fi.qualname}`"
+            )
+
+
+# ---------------------------------------------------------------------------
+# dyn-control
+# ---------------------------------------------------------------------------
+
+
+def check_dyn_control(idx: ModuleIndex):
+    for fi in idx.functions.values():
+        if fi.tier != "traced":
+            continue
+        for node in scope_walk(fi.node):
+            if isinstance(node, (ast.If, ast.While)) and _contains_jnp_call(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield Violation(
+                    idx.relpath, node.lineno, "dyn-control",
+                    f"`{kind}` over a jnp/jax expression in traced scope "
+                    f"`{fi.qualname}` is data-dependent Python control flow — "
+                    f"use jnp.where / lax.cond / lax.while_loop",
+                )
+            elif isinstance(node, (ast.For, ast.AsyncFor)) and _contains_jnp_call(
+                node.iter
+            ):
+                yield Violation(
+                    idx.relpath, node.lineno, "dyn-control",
+                    f"`for` over a jnp/jax expression in traced scope "
+                    f"`{fi.qualname}` unrolls a data-dependent loop — use "
+                    f"lax.scan / lax.fori_loop",
+                )
+            elif isinstance(node, ast.IfExp) and _contains_jnp_call(node.test):
+                yield Violation(
+                    idx.relpath, node.lineno, "dyn-control",
+                    f"conditional expression over a jnp/jax value in traced "
+                    f"scope `{fi.qualname}` — use jnp.where",
+                )
+
+
+# ---------------------------------------------------------------------------
+# collective-site
+# ---------------------------------------------------------------------------
+
+
+def check_collective_site(idx: ModuleIndex):
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.stack: list[FuncInfo] = []
+            self.hits: list[Violation] = []
+
+        def visit_FunctionDef(self, node):  # noqa: N802
+            fi = idx.func_of(node)
+            self.stack.append(fi)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef  # noqa: N815
+
+        def visit_Call(self, node):  # noqa: N802
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in config.COLLECTIVE_PRIMS
+                and _root_name(f) in _JNP_NAMES | {"lax"}
+            ):
+                top = self.stack[-1].qualname.split(".")[0] if self.stack else "<module>"
+                blessed = config.BLESSED_COLLECTIVE_SITES.get(f.attr, frozenset())
+                if not any(
+                    idx.relpath.endswith(suffix) and top == qual
+                    for suffix, qual in blessed
+                ):
+                    sites = (
+                        " / ".join(f"{s}::{q}" for s, q in sorted(blessed))
+                        or "none — this collective has no blessed site"
+                    )
+                    self.hits.append(
+                        Violation(
+                            idx.relpath, node.lineno, "collective-site",
+                            f"jax.lax.{f.attr} outside its blessed site(s): "
+                            f"{sites}. New collectives change the stage comm "
+                            f"contract the jaxpr auditor pins",
+                        )
+                    )
+            self.generic_visit(node)
+
+    v = V()
+    v.visit(idx.tree)
+    yield from v.hits
+
+
+# ---------------------------------------------------------------------------
+# pallas-confined
+# ---------------------------------------------------------------------------
+
+
+def check_pallas_confined(idx: ModuleIndex):
+    if "repro/core/" not in idx.relpath:
+        return
+    for node in ast.walk(idx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            mod = node.module
+            if mod == "repro.kernels" or mod.endswith(".kernels"):
+                for a in node.names:
+                    if a.name in config.RAW_KERNEL_MODULES:
+                        yield Violation(
+                            idx.relpath, node.lineno, "pallas-confined",
+                            f"core/ imports raw kernel module "
+                            f"`repro.kernels.{a.name}` — go through ops/ref "
+                            f"(layering: core -> ops -> pallas)",
+                        )
+            elif mod.startswith("repro.kernels."):
+                leaf = mod.rsplit(".", 1)[1]
+                if leaf in config.RAW_KERNEL_MODULES:
+                    yield Violation(
+                        idx.relpath, node.lineno, "pallas-confined",
+                        f"core/ imports from raw kernel module `{mod}` — go "
+                        f"through ops/ref (layering: core -> ops -> pallas)",
+                    )
+            if "pallas" in mod.split(".") or any(
+                a.name == "pallas" for a in node.names
+            ):
+                yield Violation(
+                    idx.relpath, node.lineno, "pallas-confined",
+                    "core/ imports pallas directly — kernels/ is the only "
+                    "layer that may touch pallas",
+                )
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                parts = a.name.split(".")
+                if "pallas" in parts or (
+                    len(parts) >= 3
+                    and parts[-2] == "kernels"
+                    and parts[-1] in config.RAW_KERNEL_MODULES
+                ):
+                    yield Violation(
+                        idx.relpath, node.lineno, "pallas-confined",
+                        f"core/ imports `{a.name}` — raw kernel/pallas "
+                        f"modules are confined to kernels/",
+                    )
+
+
+ALL_RULES = (
+    check_host_sync,
+    check_dispatch_triad,
+    check_f64_cast,
+    check_dyn_control,
+    check_collective_site,
+    check_pallas_confined,
+)

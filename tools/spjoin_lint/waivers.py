@@ -1,0 +1,69 @@
+"""Waiver parsing for the SP-Join contract linter.
+
+A waiver suppresses one (or more) rules on one line of code:
+
+    x = np.asarray(v)  # spjoin-lint: allow[host-sync] -- one-off per cell, not per tile
+
+or, as a standalone comment, it applies to the next code line:
+
+    # spjoin-lint: allow[host-sync] -- one-off per cell, not per tile
+    x = np.asarray(v)
+
+The `-- justification` part is mandatory (enforced by the waiver-hygiene
+rule), as is naming a real rule and actually suppressing something; the
+total waiver count across the tree is capped by ``config.MAX_WAIVERS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+WAIVER_RE = re.compile(
+    r"#\s*spjoin-lint:\s*allow\[([A-Za-z0-9_,\- ]+)\]\s*(?:--\s*(.*\S))?\s*$"
+)
+
+
+@dataclasses.dataclass
+class Waiver:
+    file: str
+    line: int  # line the waiver comment sits on
+    target_line: int  # line of code the waiver applies to
+    rules: tuple[str, ...]
+    justification: str
+    used: bool = False
+
+
+def parse_waivers(source: str, filename: str) -> list[Waiver]:
+    """Extract every waiver in ``source``; standalone comment lines bind to
+    the next non-blank, non-comment line."""
+    lines = source.splitlines()
+    out: list[Waiver] = []
+    for i, text in enumerate(lines, start=1):
+        m = WAIVER_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        just = (m.group(2) or "").strip()
+        target = i
+        if text.lstrip().startswith("#"):  # standalone comment: next code line
+            j = i  # 0-based index of the following line
+            while j < len(lines):
+                nxt = lines[j].strip()
+                if nxt and not nxt.startswith("#"):
+                    target = j + 1
+                    break
+                j += 1
+        out.append(
+            Waiver(
+                file=filename, line=i, target_line=target,
+                rules=rules, justification=just,
+            )
+        )
+    return out
+
+
+def waivers_by_target(waivers: list[Waiver]) -> dict[int, list[Waiver]]:
+    by_line: dict[int, list[Waiver]] = {}
+    for w in waivers:
+        by_line.setdefault(w.target_line, []).append(w)
+    return by_line
