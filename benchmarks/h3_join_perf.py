@@ -26,7 +26,13 @@ Sections (``--rs`` adds a fourth):
    mesh. Reports measured per-device ``balance_std`` / ``makespan_ratio``,
    the planner's quality report (certified bound), slot/split counts and the
    capacity effect; asserts both placements emit byte-identical pair sets.
-5. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
+5. incremental — the streaming layer (``MetricIndex.insert_batch``): one
+   delta absorbed into a live index vs a from-scratch rebuild-and-join over
+   the grown set, at 1% / 10% / 50% delta fractions. Reports the amortized
+   delta cost, the rebuild cost it displaces, the drift monitor's decision
+   and the ``incremental_identical`` certificate (accumulated pairs
+   byte-identical to the from-scratch join — docs/STREAMING.md).
+6. rs (``--rs``) — the two-set R×S cross join with asymmetric |R| << |S|
    (the skew-sensitive case), exactness-checked in-subprocess against the
    brute-force cross oracle; reports wall time, W capacity, the S-side
    duplication metric Σ|W_h|/|S| and the pruning rate.
@@ -34,9 +40,12 @@ Sections (``--rs`` adds a fourth):
 Emits ``runs/bench_h3.csv`` + ``runs/h3_perf.json`` (the JSON is the CI
 smoke-benchmark contract: ``python benchmarks/h3_join_perf.py --smoke --rs``
 must run to completion, write it, report a NONZERO pruning rate, a
-byte-identical map-phase section, and a placement section with
+byte-identical map-phase section, a placement section with
 ``placement_identical == true`` and LPT ``balance_std`` no worse than
-contiguous). Schema of the JSON: docs/BENCHMARKS.md.
+contiguous, and an incremental section with
+``incremental_identical == true`` whose 1%-fraction arm absorbs the delta
+cheaper than the rebuild it displaces). Schema of the JSON:
+docs/BENCHMARKS.md.
 
 Run:
     PYTHONPATH=src python benchmarks/h3_join_perf.py [--smoke] [--rs]
@@ -392,6 +401,59 @@ def run_verify_engine(n: int, delta: float) -> dict:
     )
 
 
+def run_incremental(n: int, delta: float) -> dict:
+    """Section 5: the streaming layer's amortization claim, measured.
+
+    For each delta fraction f, build a live index on n rows, absorb an
+    f·n-row delta through ``insert_batch`` (only the delta is mapped; the
+    ΔR×R_old verify streams against the resident V lists), and compare
+    against what a batch system pays for the same state: a from-scratch
+    ``spjoin.join`` over the n + f·n rows. The exactness certificate rides
+    along: build-time pairs ∪ insert_batch pairs must be byte-identical to
+    the from-scratch pair set (the ISSUE-8 contract)."""
+    import numpy as np
+    from repro.core import index as index_lib, spjoin
+    from repro.data import synthetic
+
+    pool = synthetic.mixture(n + n // 2 + 1, 12, n_clusters=6, skew=0.5, seed=0)
+    cfg = spjoin.JoinConfig(delta=delta, metric="l1", k=256, p=16, n_dims=6,
+                            sampler="generative", seed=0)
+    arms = []
+    for frac in (0.01, 0.10, 0.50):
+        n_delta = max(1, int(n * frac))
+        base, delta_rows = pool[:n], pool[n : n + n_delta]
+        full = pool[: n + n_delta]
+
+        t0 = time.perf_counter()
+        idx = index_lib.build_index(base, cfg)
+        build_s = time.perf_counter() - t0
+        base_pairs = idx.self_pairs()
+
+        t0 = time.perf_counter()
+        new_pairs, stats = idx.insert_batch(delta_rows, rebuild_cfg=cfg)
+        delta_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        scratch = spjoin.join(full, cfg)
+        rebuild_s = time.perf_counter() - t0
+
+        acc = np.unique(np.concatenate([base_pairs, new_pairs]), axis=0)
+        arms.append(dict(
+            frac=frac, n=n, n_delta=n_delta,
+            build_ms=round(build_s * 1e3, 1),
+            delta_ms=round(delta_s * 1e3, 1),
+            rebuild_ms=round(rebuild_s * 1e3, 1),
+            amortization=round(rebuild_s / max(delta_s, 1e-9), 2),
+            n_new_pairs=int(new_pairs.shape[0]),
+            drift=round(stats.drift, 4), action=stats.action,
+            identical=bool(acc.tobytes() == scratch.pairs.tobytes()),
+        ))
+    return dict(
+        n=n, arms=arms,
+        incremental_identical=bool(all(a["identical"] for a in arms)),
+    )
+
+
 def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
         smoke: bool = False, rs: bool = False) -> dict:
     if smoke:
@@ -455,8 +517,20 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
                    round(row["padding"], 2), placement["placement_identical"])
     csv_pl.close()
 
+    stream = run_incremental(max(n // 2, 400), delta)
+    csv_st = Csv("bench_h3_stream.csv",
+                 ["frac", "n", "n_delta", "build_ms", "delta_ms",
+                  "rebuild_ms", "amortization", "n_new_pairs", "drift",
+                  "action", "identical"])
+    for a in stream["arms"]:
+        csv_st.row(a["frac"], a["n"], a["n_delta"], a["build_ms"],
+                   a["delta_ms"], a["rebuild_ms"], a["amortization"],
+                   a["n_new_pairs"], a["drift"], a["action"], a["identical"])
+    csv_st.close()
+
     report = dict(smoke=smoke, distributed=rows, verify_engine=engine,
-                  map_phase=map_phase, placement=placement)
+                  map_phase=map_phase, placement=placement,
+                  incremental=stream)
 
     if rs:
         # Asymmetric two-set arm: |R| = n/5 against |S| = n, exactness-checked

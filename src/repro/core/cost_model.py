@@ -125,6 +125,35 @@ def predicted_cell_loads(
     )
 
 
+def load_drift(predicted: np.ndarray, observed: np.ndarray) -> float:
+    """Scale-free drift between the cost model's predicted per-cell loads and
+    the loads actually observed: the total-variation distance
+    ``0.5 · Σ_h |p̂_h − ô_h|`` of the sum-normalized load vectors, in [0, 1].
+
+    0 means the pivot sample still describes the data (the placement plan's
+    relative cell weights are right even if the absolute scale grew with
+    inserts); 1 means the observed mass sits entirely in cells the sample
+    predicted empty. Normalizing first is what makes append-only growth
+    drift-free when the distribution is stationary: doubling every cell's
+    load changes nothing. The streaming layer compares this against the
+    re-plan / re-sample thresholds (``core.placement.drift_action``,
+    decision table in docs/STREAMING.md).
+    """
+    p = np.asarray(predicted, np.float64).reshape(-1)
+    o = np.asarray(observed, np.float64).reshape(-1)
+    if p.shape != o.shape:
+        raise ValueError(
+            f"predicted and observed loads must align per cell; got "
+            f"{p.shape} vs {o.shape}"
+        )
+    ps, os_ = p.sum(), o.sum()
+    if ps <= 0 and os_ <= 0:
+        return 0.0
+    if ps <= 0 or os_ <= 0:
+        return 1.0
+    return float(0.5 * np.abs(p / ps - o / os_).sum())
+
+
 def predict_capacity(
     w_est: np.ndarray,
     n_shards: int,

@@ -1279,3 +1279,49 @@ class DistIndex:
         gi = self._fv_ids_host[slot, vi]
         gj = w_ids[slot, wi]
         return np.unique(np.stack([gi, gj], axis=1), axis=0).astype(np.int64)
+
+    def _repin(self) -> None:
+        """Re-lay the host index out on the mesh after an absorb (or a
+        drift-triggered re-plan/rebuild): fresh slot buffers, fresh routing
+        plan, and — critically — a cleared stage cache, because the query
+        boxes the serve stage compiled with are baked into its trace and the
+        absorb just grew them."""
+        fresh = DistIndex.from_index(self.index, self.mesh, self.axis)
+        self.pl = fresh.pl
+        self.backend = fresh.backend
+        self.prune = fresh.prune
+        self.cap_v = fresh.cap_v
+        self.fv = fresh.fv
+        self.fv_ids = fresh.fv_ids
+        self._fv_ids_host = fresh._fv_ids_host
+        self._x_abs = fresh._x_abs
+        self._stages.clear()
+
+    def insert_batch(
+        self,
+        new_rows: Array | np.ndarray,
+        *,
+        replan_drift: float | None = None,
+        resample_drift: float | None = None,
+        rebuild_cfg=None,
+    ):
+        """Distributed mirror of ``MetricIndex.insert_batch``: same control
+        flow, same drift monitor, byte-identical pair set — but the ΔR×R_old
+        cross verify rides the serve stage, so only delta bytes cross the
+        interconnect (one W-side ``all_to_all``) while the resident V
+        buffers stay pinned. The ΔR×ΔR self-join and the index update run on
+        the replicated host control plane (they touch only delta-sized
+        state), then the grown index is re-pinned.
+
+        Returns ``(new_pairs, StreamStats)`` exactly like the host method;
+        global ids, i < j, sorted unique.
+        """
+        pairs, stats = self.index.insert_batch(
+            new_rows,
+            replan_drift=replan_drift,
+            resample_drift=resample_drift,
+            rebuild_cfg=rebuild_cfg,
+            _cross_pairs_fn=self.query_batch,
+        )
+        self._repin()
+        return pairs, stats

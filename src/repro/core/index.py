@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances, mapping, partition, spjoin
+from repro.core import cost_model, distances, mapping, partition, spjoin
 from repro.core import placement as placement_lib
 from repro.core import verify as verify_lib
 from repro.kernels import ops as kops
@@ -67,12 +67,17 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
 Array = jnp.ndarray
 
 FORMAT_NAME = "spjoin-metric-index"
-FORMAT_VERSION = 1
+# Version 2 adds the incremental-insert state: the manifest's "incremental"
+# block (n_base / n_inserted / n_batches) and the observed_w drift telemetry
+# array. Version-1 artifacts predate insert_batch and are refused (re-save
+# with current code) — silently defaulting the counters would let a
+# save→insert→load→insert round trip diverge from the unsaved session.
+FORMAT_VERSION = 2
 
 # Arrays persisted bit-exact in arrays.npz (name -> MetricIndex attribute).
 _ARRAYS = (
     "data", "coords", "cells", "pivots", "anchors",
-    "kernel_lo", "kernel_hi", "box_lo", "box_hi",
+    "kernel_lo", "kernel_hi", "box_lo", "box_hi", "observed_w",
 )
 _PLAN_ARRAYS = (
     "cell_loads", "cell_first_slot", "cell_n_slabs",
@@ -105,6 +110,74 @@ class QueryStats:
         """Σ memberships / |Q| — the query-side routing amplification
         (the serving analogue of the shuffle metric Σ|W_h|/|S|)."""
         return self.n_routed / max(self.n_queries, 1)
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Telemetry of one ``insert_batch`` call — the streaming analogue of
+    ``QueryStats``, plus the drift monitor's decision trail.
+
+    ``drift`` is ``cost_model.load_drift`` between the placement plan's
+    predicted per-cell loads and the loads observed so far; ``action`` is
+    what actually fired ("none" | "replan" | "resample"; the session layer
+    also stamps "build" on the first batch). ``resample_due`` flags a drift
+    past the re-sample threshold when no rebuild config was supplied — the
+    cheap re-plan ran instead and the caller should rebuild when it can.
+    ``balance_std_before``/``after`` score the plan in force before/after
+    the action on the SAME observed loads (``placement.device_loads_under``),
+    so a re-plan's improvement is directly visible.
+    """
+
+    n_delta: int = 0  # rows in this insertion batch
+    n_resident: int = 0  # rows resident before the insert
+    n_total: int = 0  # rows resident after the insert
+    n_cross_pairs: int = 0  # ΔR×R_old pairs emitted
+    n_self_pairs: int = 0  # ΔR×ΔR pairs emitted
+    n_new_pairs: int = 0  # total pairs this batch contributed
+    drift: float = 0.0
+    replan_threshold: float = 0.0
+    resample_threshold: float = 0.0
+    action: str = "none"
+    resample_due: bool = False
+    balance_std_before: float = 0.0
+    balance_std_after: float = 0.0
+    route_s: float = 0.0  # fused delta map-assign time
+    verify_s: float = 0.0  # cross + self verify time
+    update_s: float = 0.0  # absorb + drift bookkeeping time
+    cross_verify: verify_lib.VerifyStats | None = None
+    self_verify: verify_lib.VerifyStats | None = None
+
+
+def _member_matrix(
+    coords: np.ndarray, wlo: np.ndarray, whi: np.ndarray, chunk: int = 65536
+) -> np.ndarray:
+    """(n, p) bool whole membership of mapped coordinates under δ-expanded
+    boxes — the same closed-interval comparison the fused kernel packs into
+    its bitmask, evaluated host-side from CACHED coordinates (no re-map).
+    Row-chunked so the (n, p, dims) broadcast never materializes."""
+    n = coords.shape[0]
+    out = np.zeros((n, wlo.shape[0]), bool)
+    for i0 in range(0, n, chunk):
+        c = coords[i0 : i0 + chunk]
+        out[i0 : i0 + chunk] = (
+            (c[:, None, :] >= wlo[None]) & (c[:, None, :] <= whi[None])
+        ).all(-1)
+    return out
+
+
+def _member_counts(
+    coords: np.ndarray, wlo: np.ndarray, whi: np.ndarray, chunk: int = 65536
+) -> np.ndarray:
+    """(p,) float64 per-cell whole-member counts (drift telemetry baseline)."""
+    out = np.zeros(wlo.shape[0], np.float64)
+    for i0 in range(0, coords.shape[0], chunk):
+        c = coords[i0 : i0 + chunk]
+        out += (
+            ((c[:, None, :] >= wlo[None]) & (c[:, None, :] <= whi[None]))
+            .all(-1)
+            .sum(0)
+        )
+    return out
 
 
 @dataclasses.dataclass
@@ -145,6 +218,15 @@ class MetricIndex:
     placement: placement_lib.PlacementPlan
     build_s: float = 0.0
     node_confidences: np.ndarray | None = None
+
+    # -- incremental-insert state (persisted, format v2) --------------------
+    n_base: int = 0  # rows the initial build indexed
+    n_inserted: int = 0  # rows appended by insert_batch since build/rebuild
+    n_batches: int = 0  # insert_batch calls absorbed (survives rebuilds)
+    observed_w: np.ndarray | None = None  # (p,) observed whole-member counts
+    #   — exact at build, then accumulated per delta at insert time (an old
+    #   row's membership is not recomputed as boxes grow); drift TELEMETRY,
+    #   never exactness-bearing (docs/STREAMING.md)
 
     # -- derived query-phase caches (never persisted) -----------------------
     _v_lists: list[np.ndarray] | None = dataclasses.field(default=None, repr=False)
@@ -244,23 +326,18 @@ class MetricIndex:
         q_np = np.asarray(q, np.float32)
         t0 = time.perf_counter()
         q_coords, member = self.route(q_np, delta)
-        w_lists = [np.flatnonzero(member[:, h]) for h in range(self.p)]
         t_route = time.perf_counter() - t0
 
-        prune = verify_lib.resolve_prune(self.prune, self.metric, True)
-        cfg = verify_lib.EngineConfig(
-            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w,
-            prune=prune,
-        )
         t0 = time.perf_counter()
-        pairs, vstats = verify_lib.verify_cell_lists(
-            self.data, self.cells, self.v_lists, w_lists, delta, self.metric,
-            config=cfg, data_w=q_np, coords=self.coords, coords_w=q_coords,
+        pairs, vstats = verify_lib.verify_resident(
+            self.data, self.cells, self.v_lists, member, delta, self.metric,
+            config=self._engine_config(), data_w=q_np,
+            coords=self.coords, coords_w=q_coords,
         )
         t_verify = time.perf_counter() - t0
         if not with_stats:
             return pairs
-        touched = sum(1 for w in w_lists if w.size)
+        touched = int((member.sum(0) > 0).sum())
         stats = QueryStats(
             n_queries=int(q_np.shape[0]),
             n_routed=int(member.sum()),
@@ -278,6 +355,291 @@ class MetricIndex:
             raise ValueError(f"query() takes one point (m,); got shape {q.shape}")
         pairs = self.query_batch(q[None, :], delta)
         return np.sort(pairs[:, 0])
+
+    # ------------------------------------------------------------ streaming
+
+    def _engine_config(self) -> verify_lib.EngineConfig:
+        return verify_lib.EngineConfig(
+            backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w,
+            prune=verify_lib.resolve_prune(self.prune, self.metric, True),
+        )
+
+    def _ensure_stream_state(self) -> None:
+        """Initialize the incremental counters on indexes that predate them
+        (hand-constructed in tests, or deserialized mid-refactor)."""
+        if self.n_base == 0 and self.n_rows > self.n_inserted:
+            self.n_base = self.n_rows - self.n_inserted
+        if self.observed_w is None:
+            wlo, whi = self.query_boxes(self.delta)
+            self.observed_w = _member_counts(self.coords, wlo, whi)
+
+    @property
+    def observed_loads(self) -> np.ndarray:
+        """(p,) OBSERVED per-cell verification loads |V_h|·|W_h| — the
+        measured counterpart of the placement plan's predicted
+        ``cell_loads`` and the drift monitor's second input."""
+        self._ensure_stream_state()
+        v_obs = np.bincount(self.cells, minlength=self.p).astype(np.float64)
+        assert self.observed_w is not None
+        return v_obs * self.observed_w[: self.p]
+
+    def self_pairs(self) -> np.ndarray:
+        """Self-join pairs of the resident set through the index's own
+        cached artifacts (coords, cells, δ-expanded boxes) — what a one-shot
+        ``spjoin.join`` over this partition geometry emits, without
+        re-running any control plane. The streaming session uses this for
+        batch 0; fixed-seed output is byte-identical to
+        ``spjoin.brute_force_pairs`` (the join is exact under any
+        containment-consistent plan)."""
+        wlo, whi = self.query_boxes(self.delta)
+        member = _member_matrix(self.coords, wlo, whi)
+        pairs, _ = verify_lib.verify_pairs(
+            self.data, self.cells, member, self.delta, self.metric,
+            config=self._engine_config(), coords=self.coords,
+        )
+        return pairs
+
+    def _delta_route(
+        self, d_np: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Map an insertion delta through the SAME fused map-assign pass as
+        the build: mapped coordinates, kernel cells, and whole membership
+        under the CURRENT (pre-absorb) δ-expanded boxes — the Lemma-4 routing
+        for the ΔR×R_old cross verify."""
+        wlo, whi = self.query_boxes(self.delta)
+        if self.map_fused and kops.supports_kernel(self.metric):
+            dm, cells, bits = kops.map_assign(
+                jnp.asarray(d_np), jnp.asarray(self.anchors),
+                jnp.asarray(self.kernel_lo), jnp.asarray(self.kernel_hi),
+                jnp.asarray(wlo), jnp.asarray(whi),
+                self.metric, backend=self.backend, want="both",
+            )
+            member = kops.unpack_membership(bits, self.p)
+            return (
+                np.asarray(dm, np.float32),
+                np.asarray(cells, np.int32),
+                np.asarray(member, bool),
+            )
+        dm = np.asarray(self.space_map(jnp.asarray(d_np)), np.float32)
+        pplan = partition.PartitionPlan(
+            jnp.asarray(self.kernel_lo), jnp.asarray(self.kernel_hi),
+            jnp.asarray(wlo), jnp.asarray(whi), self.delta,
+        )
+        cells = np.asarray(partition.assign_kernel(pplan, jnp.asarray(dm)), np.int32)
+        member = _member_matrix(dm, wlo, whi)
+        return dm, cells, member
+
+    def _delta_self_pairs(
+        self, d_np: np.ndarray, d_coords: np.ndarray, d_cells: np.ndarray
+    ) -> tuple[np.ndarray, verify_lib.VerifyStats, np.ndarray, np.ndarray, np.ndarray]:
+        """ΔR×ΔR self-join, DELTA-LOCAL ids, plus the updated base boxes.
+
+        The member MBBs are first extended with the delta's own coordinates —
+        only then does Lemma 4 cover delta-vs-delta partners (each delta row
+        must sit inside its own cell's box before the δ-expansion can catch
+        its neighbours). Returns (pairs_local, stats, new_box_lo, new_box_hi,
+        member_new) with member_new the delta's membership under the UPDATED
+        boxes (also the absorb's observed_w increment).
+        """
+        new_lo = self.box_lo.copy()
+        new_hi = self.box_hi.copy()
+        np.minimum.at(new_lo, d_cells, d_coords)
+        np.maximum.at(new_hi, d_cells, d_coords)
+        qlo = (new_lo - np.float32(self.delta)).astype(np.float32)
+        qhi = (new_hi + np.float32(self.delta)).astype(np.float32)
+        member_new = _member_matrix(d_coords, qlo, qhi)
+        pairs, vstats = verify_lib.verify_pairs(
+            d_np, d_cells, member_new, self.delta, self.metric,
+            config=self._engine_config(), coords=d_coords,
+        )
+        return pairs, vstats, new_lo, new_hi, member_new
+
+    def _absorb(
+        self,
+        d_np: np.ndarray,
+        d_coords: np.ndarray,
+        d_cells: np.ndarray,
+        member_new: np.ndarray,
+        new_lo: np.ndarray,
+        new_hi: np.ndarray,
+    ) -> None:
+        """Append the delta to the resident arrays and every derived cache.
+
+        The per-cell V lists are EXTENDED, not recomputed: delta ids are
+        global-contiguous above the resident set, so appending each cell's
+        delta members preserves the exact order the stable-argsort
+        derivation would produce from scratch — repeated deltas amortize.
+        """
+        n_old = self.n_rows
+        assert self.observed_w is not None
+        self.data = np.concatenate([self.data, d_np])
+        self.coords = np.concatenate([self.coords, d_coords])
+        self.cells = np.concatenate([self.cells, d_cells.astype(self.cells.dtype)])
+        self.box_lo = new_lo
+        self.box_hi = new_hi
+        if self._v_lists is not None:
+            order = np.argsort(d_cells, kind="stable")
+            bounds = np.searchsorted(d_cells[order], np.arange(self.p + 1))
+            for h in range(self.p):
+                extra = order[bounds[h] : bounds[h + 1]]
+                if extra.size:
+                    self._v_lists[h] = np.concatenate(
+                        [self._v_lists[h], n_old + extra]
+                    )
+        self.observed_w = self.observed_w + member_new.sum(0)
+        self.n_inserted += int(d_np.shape[0])
+        self.n_batches += 1
+
+    def _rebuild(self, cfg) -> None:
+        """Re-sample pivots and rebuild from the full accumulated data (the
+        expensive drift action): every artifact — pivots, anchors, partition,
+        boxes, placement, caches — is replaced in place. The accumulated
+        PAIR SET is untouched: the join is exact under any
+        containment-consistent plan, so a rebuild resets predictions, never
+        answers."""
+        n_batches = self.n_batches
+        if self.n_rows < cfg.n_dims:
+            # Row-fallback samplers cap pivots at n_rows; a tiny stream can't
+            # support the full mapped dimensionality yet (spjoin session
+            # applies the same clamp on its first build).
+            cfg = dataclasses.replace(cfg, n_dims=max(1, self.n_rows))
+        fresh = build_index(
+            self.data, cfg,
+            n_nodes=max(1, min(4, self.n_rows)), n_devices=self.n_devices,
+        )
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
+        self.n_batches = n_batches
+
+    def _drift_step(
+        self,
+        stats: StreamStats,
+        replan_drift: float,
+        resample_drift: float,
+        rebuild_cfg,
+    ) -> None:
+        """Measure drift against the plan in force and fire the cheap action
+        (re-plan: a static permutation, pairs unchanged) before the expensive
+        one (re-sample → full rebuild; needs ``rebuild_cfg``)."""
+        observed = self.observed_loads
+        stats.drift = cost_model.load_drift(self.placement.cell_loads, observed)
+        stats.balance_std_before = float(
+            placement_lib.device_loads_under(self.placement, observed).std()
+        )
+        action = placement_lib.drift_action(stats.drift, replan_drift, resample_drift)
+        if action == "resample" and rebuild_cfg is None:
+            # No control-plane config to rebuild with: fall back to the cheap
+            # action and surface the debt (resample_due) to the caller.
+            stats.resample_due = True
+            action = "replan"
+        if action == "resample":
+            self._rebuild(rebuild_cfg)
+        elif action == "replan":
+            self.placement = placement_lib.plan_placement(
+                observed, self.placement.n_devices,
+                strategy=self.placement_strategy,
+            )
+        stats.action = action
+        stats.balance_std_after = float(
+            placement_lib.device_loads_under(self.placement, self.observed_loads).std()
+        )
+
+    def insert_batch(
+        self,
+        new_rows: np.ndarray | Array,
+        *,
+        replan_drift: float | None = None,
+        resample_drift: float | None = None,
+        rebuild_cfg=None,
+        _cross_pairs_fn=None,
+    ) -> tuple[np.ndarray, StreamStats]:
+        """Absorb an insertion batch and return the NEW pairs it creates.
+
+        Only the delta is mapped (one fused map-assign pass); the new pairs
+        are ΔR×R_old — the delta routed against the RESIDENT per-cell V
+        lists through the same ``verify_resident`` tile path as
+        ``query_batch`` — plus the ΔR×ΔR self-join under the updated member
+        MBBs. Returned pairs use GLOBAL row ids (delta row j ↦ n_resident +
+        j), i < j, sorted unique; no sampling, fitting, partitioning or
+        placement work happens unless the drift monitor fires.
+
+        Exactness contract: for a fixed seed and ANY split of R into
+        insertion batches, the union of ``build``-time pairs and every
+        ``insert_batch`` return is byte-identical to a from-scratch join of
+        the full R (property-tested in tests/test_incremental.py).
+
+        ``replan_drift`` / ``resample_drift``: drift thresholds (default
+        ``core.placement.REPLAN_DRIFT`` / ``RESAMPLE_DRIFT``). ``rebuild_cfg``
+        (a ``spjoin.JoinConfig``) arms the re-sample action; without it a
+        re-sample-worthy drift downgrades to a re-plan with
+        ``StreamStats.resample_due`` set. ``_cross_pairs_fn`` lets the
+        distributed mirror route the ΔR×R_old verify through its serve stage
+        while sharing this exact control flow.
+        """
+        self._ensure_stream_state()
+        rt = placement_lib.REPLAN_DRIFT if replan_drift is None else float(replan_drift)
+        rs = placement_lib.RESAMPLE_DRIFT if resample_drift is None else float(resample_drift)
+        d_np = np.asarray(new_rows, np.float32)
+        if d_np.ndim != 2 or (d_np.shape[0] and d_np.shape[1] != self.n_features):
+            raise ValueError(
+                f"insert_batch expects (B, {self.n_features}) rows; got "
+                f"shape {d_np.shape}"
+            )
+        stats = StreamStats(
+            n_delta=int(d_np.shape[0]), n_resident=self.n_rows,
+            n_total=self.n_rows + int(d_np.shape[0]),
+            replan_threshold=rt, resample_threshold=rs,
+        )
+        if d_np.shape[0] == 0:
+            # Empty delta: nothing routed, nothing absorbed, nothing fired.
+            stats.drift = cost_model.load_drift(
+                self.placement.cell_loads, self.observed_loads
+            )
+            return np.zeros((0, 2), np.int64), stats
+
+        n_old = self.n_rows
+        t0 = time.perf_counter()
+        d_coords, d_cells, d_member_old = self._delta_route(d_np)
+        stats.route_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        if _cross_pairs_fn is None:
+            cross, cstats = verify_lib.verify_resident(
+                self.data, self.cells, self.v_lists, d_member_old,
+                self.delta, self.metric, config=self._engine_config(),
+                data_w=d_np, coords=self.coords, coords_w=d_coords,
+            )
+            stats.cross_verify = cstats
+        else:
+            cross = np.asarray(_cross_pairs_fn(d_np), np.int64).reshape(-1, 2)
+        self_local, sstats, new_lo, new_hi, member_new = self._delta_self_pairs(
+            d_np, d_coords, d_cells
+        )
+        stats.self_verify = sstats
+        stats.verify_s = time.perf_counter() - t0
+        stats.n_cross_pairs = int(cross.shape[0])
+        stats.n_self_pairs = int(self_local.shape[0])
+
+        # Globalize: cross pairs are (i ∈ resident, j ∈ delta) — already
+        # i < n_old + j; ΔΔ pairs shift both columns above the resident set.
+        chunks = []
+        if cross.shape[0]:
+            chunks.append(
+                np.stack([cross[:, 0], n_old + cross[:, 1]], axis=1)
+            )
+        if self_local.shape[0]:
+            chunks.append(self_local + n_old)
+        if chunks:
+            pairs = np.unique(np.concatenate(chunks), axis=0).astype(np.int64)
+        else:
+            pairs = np.zeros((0, 2), np.int64)
+        stats.n_new_pairs = int(pairs.shape[0])
+
+        t0 = time.perf_counter()
+        self._absorb(d_np, d_coords, d_cells, member_new, new_lo, new_hi)
+        self._drift_step(stats, rt, rs, rebuild_cfg)
+        stats.update_s = time.perf_counter() - t0
+        return pairs, stats
 
     # ----------------------------------------------------------- distributed
 
@@ -316,6 +678,11 @@ class MetricIndex:
             "tile_w": self.tile_w,
             "seed": self.seed,
             "build_s": float(self.build_s),
+            "incremental": {
+                "n_base": int(self.n_base),
+                "n_inserted": int(self.n_inserted),
+                "n_batches": int(self.n_batches),
+            },
             "placement": {
                 "strategy": self.placement.strategy,
                 "n_devices": self.placement.n_devices,
@@ -328,6 +695,7 @@ class MetricIndex:
     def save(self, path: str) -> str:
         """Write the versioned on-disk format: ``path/manifest.json`` +
         ``path/arrays.npz`` (all arrays bit-exact). Returns ``path``."""
+        self._ensure_stream_state()
         os.makedirs(path, exist_ok=True)
         arrays = {name: np.asarray(getattr(self, name)) for name in _ARRAYS}
         for name in _PLAN_ARRAYS:
@@ -408,6 +776,21 @@ class MetricIndex:
                 f"manifest pivot count k={man['k']} disagrees with the stored "
                 f"pivots array ({arrays['pivots'].shape[0]} rows)"
             )
+        inc = man.get("incremental")
+        if not isinstance(inc, dict) or not {
+            "n_base", "n_inserted", "n_batches"
+        } <= set(inc):
+            raise IndexFormatError(
+                "version-2 manifest is missing the incremental block "
+                "(n_base / n_inserted / n_batches) — artifact is corrupt"
+            )
+        if int(inc["n_base"]) + int(inc["n_inserted"]) != int(man["n_rows"]):
+            raise IndexMismatchError(
+                f"incremental counters disagree with the stored data: "
+                f"n_base={inc['n_base']} + n_inserted={inc['n_inserted']} != "
+                f"n_rows={man['n_rows']} — the appended-delta history does "
+                f"not describe this artifact; refusing to resume the stream"
+            )
 
         pman = man["placement"]
         loads = arrays["pl_cell_loads"]
@@ -450,6 +833,10 @@ class MetricIndex:
             placement=plan,
             build_s=float(man.get("build_s", 0.0)),
             node_confidences=arrays.get("node_confidences"),
+            n_base=int(inc["n_base"]),
+            n_inserted=int(inc["n_inserted"]),
+            n_batches=int(inc["n_batches"]),
+            observed_w=arrays["observed_w"],
         )
 
 
@@ -576,6 +963,12 @@ def build_index(
         box_hi=box_hi,
         placement=pl,
         node_confidences=np.array([st.confidence for st in node_stats]),
+        n_base=int(allx.shape[0]),
+        observed_w=_member_counts(
+            np.asarray(x_mapped, np.float32),
+            (box_lo - np.float32(cfg.delta)).astype(np.float32),
+            (box_hi + np.float32(cfg.delta)).astype(np.float32),
+        ),
     )
     idx.build_s = time.perf_counter() - t_start
     return idx

@@ -58,6 +58,56 @@ from repro.core import cost_model
 
 STRATEGIES = ("contiguous", "lpt")
 
+# Streaming drift thresholds (docs/STREAMING.md decision table). Measured as
+# cost_model.load_drift (total-variation distance of normalized cell loads):
+# past REPLAN_DRIFT the plan's relative weights are stale enough that a cheap
+# re-plan (static permutation, pairs unchanged) pays for itself; past
+# RESAMPLE_DRIFT the pivot sample itself no longer describes the data and
+# only a re-sample + rebuild resets the predictions.
+REPLAN_DRIFT = 0.15
+RESAMPLE_DRIFT = 0.5
+
+DRIFT_ACTIONS = ("none", "replan", "resample")
+
+
+def drift_action(
+    drift: float,
+    replan_threshold: float = REPLAN_DRIFT,
+    resample_threshold: float = RESAMPLE_DRIFT,
+) -> str:
+    """Map a measured drift to the action the streaming layer should fire:
+    the cheap one ("replan" — re-run :func:`plan_placement` on the observed
+    loads; a static permutation, the pair set cannot change) before the
+    expensive one ("resample" — redraw pivots and rebuild the index). The
+    thresholds are ordered: a drift past both fires "resample"."""
+    if resample_threshold < replan_threshold:
+        raise ValueError(
+            f"resample threshold ({resample_threshold}) must be >= replan "
+            f"threshold ({replan_threshold}) — the cheap action fires first"
+        )
+    if drift >= resample_threshold:
+        return "resample"
+    if drift >= replan_threshold:
+        return "replan"
+    return "none"
+
+
+def device_loads_under(plan: "PlacementPlan", cell_loads: np.ndarray) -> np.ndarray:
+    """(D,) per-device loads an EXISTING plan induces for a NEW per-cell load
+    vector (each cell's load spread evenly over its slabs, padding slots 0).
+    This is how the drift monitor scores the stale plan against observed
+    loads — ``plan.device_loads`` always reflects the loads the plan was
+    built from, not what the data has become."""
+    loads = np.asarray(cell_loads, np.float64).reshape(-1)
+    if loads.shape[0] != plan.p:
+        raise ValueError(f"expected {plan.p} cell loads, got {loads.shape[0]}")
+    real = plan.slot_cell >= 0
+    cell = np.clip(plan.slot_cell, 0, None)
+    slot_load = np.where(real, loads[cell] / plan.cell_n_slabs[cell], 0.0)
+    out = np.zeros(plan.n_devices, np.float64)
+    np.add.at(out, plan.device_of_slot, slot_load)
+    return out
+
 
 def planner_inputs(
     piv_mapped: np.ndarray,

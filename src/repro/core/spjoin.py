@@ -352,6 +352,126 @@ def join(
     )
 
 
+class IncrementalJoin:
+    """Streaming self-join session: feed insertion batches, accumulate the
+    canonical pair set (sorted unique (i, j) int64, i < j, GLOBAL ids in
+    arrival order).
+
+    Batch 0 runs the one-time build (``index.build_index`` — the only time
+    sampling / anchor selection / partitioning execute) and emits its
+    self-join pairs through the index's cached artifacts; every later batch
+    goes through ``MetricIndex.insert_batch`` — only the delta is mapped,
+    ΔR×R_old streams against the resident V lists and ΔR×ΔR self-joins
+    under the updated member MBBs. The drift monitor rides along: a re-plan
+    is a static permutation (pairs unchanged), and a re-sample-worthy drift
+    rebuilds with this session's own ``cfg`` (the control plane the caller
+    already chose).
+
+    Exactness contract (tests/test_incremental.py): for a fixed seed and ANY
+    split of R into batches, ``pairs`` after the last insert is
+    byte-identical to ``join(R, cfg).pairs`` over the concatenated rows.
+    """
+
+    def __init__(
+        self,
+        cfg: JoinConfig,
+        *,
+        n_nodes: int = 4,
+        n_devices: int | None = None,
+        replan_drift: float | None = None,
+        resample_drift: float | None = None,
+    ):
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.n_devices = n_devices
+        self.replan_drift = replan_drift
+        self.resample_drift = resample_drift
+        self.index = None  # built lazily on the first non-empty batch
+        self.stats: list = []  # one StreamStats per insert() call
+        self._pairs = np.zeros((0, 2), np.int64)
+
+    @property
+    def pairs(self) -> np.ndarray:
+        """Accumulated canonical pair set (sorted unique, global ids)."""
+        return self._pairs
+
+    @property
+    def n_rows(self) -> int:
+        return 0 if self.index is None else self.index.n_rows
+
+    def insert(self, new_rows: Array | np.ndarray):
+        """Absorb one insertion batch; returns (new_pairs, StreamStats)."""
+        from repro.core import index as index_lib  # deferred: import cycle
+
+        d_np = np.asarray(new_rows, np.float32)
+        if self.index is None:
+            if d_np.shape[0] == 0:
+                # Nothing to build from yet — stay lazy, report a no-op.
+                stats = index_lib.StreamStats(action="none")
+                self.stats.append(stats)
+                return np.zeros((0, 2), np.int64), stats
+            bcfg = self.cfg
+            if int(d_np.shape[0]) < bcfg.n_dims:
+                # A tiny first batch can yield fewer distinct pivots than
+                # mapped dimensions (row-fallback samplers cap pivots at B).
+                # Clamping n_dims is free: exactness holds under ANY
+                # containment-consistent plan, and a drift re-sample later
+                # rebuilds with the full config once data exists.
+                bcfg = dataclasses.replace(
+                    bcfg, n_dims=max(1, int(d_np.shape[0]))
+                )
+            self.index = index_lib.build_index(
+                d_np, bcfg,
+                n_nodes=max(1, min(self.n_nodes, int(d_np.shape[0]))),
+                n_devices=self.n_devices,
+            )
+            new_pairs = self.index.self_pairs()
+            stats = index_lib.StreamStats(
+                n_delta=int(d_np.shape[0]), n_resident=0,
+                n_total=int(d_np.shape[0]),
+                n_self_pairs=int(new_pairs.shape[0]),
+                n_new_pairs=int(new_pairs.shape[0]),
+                action="build",
+            )
+        else:
+            new_pairs, stats = self.index.insert_batch(
+                d_np,
+                replan_drift=self.replan_drift,
+                resample_drift=self.resample_drift,
+                rebuild_cfg=self.cfg,
+            )
+        if new_pairs.shape[0]:
+            self._pairs = np.unique(
+                np.concatenate([self._pairs, new_pairs]), axis=0
+            )
+        self.stats.append(stats)
+        return new_pairs, stats
+
+
+def join_incremental(
+    batches,
+    cfg: JoinConfig,
+    *,
+    n_nodes: int = 4,
+    n_devices: int | None = None,
+    replan_drift: float | None = None,
+    resample_drift: float | None = None,
+) -> IncrementalJoin:
+    """Run the streaming layer over an iterable of insertion batches and
+    return the finished session (``.pairs`` is the accumulated canonical
+    set, ``.stats`` the per-batch drift/telemetry trail, ``.index`` the
+    live ``MetricIndex``). Equivalent to one ``IncrementalJoin`` with every
+    batch ``insert``-ed in order — the convenience entry point benchmarks
+    and tests use."""
+    session = IncrementalJoin(
+        cfg, n_nodes=n_nodes, n_devices=n_devices,
+        replan_drift=replan_drift, resample_drift=resample_drift,
+    )
+    for b in batches:
+        session.insert(b)
+    return session
+
+
 def brute_force_pairs(
     data: Array, delta: float, metric: str = "l1", s: Array | None = None
 ) -> np.ndarray:

@@ -492,6 +492,35 @@ def verify_cell_lists(
     return pairs.astype(np.int64), stats
 
 
+def verify_resident(
+    data: Array | np.ndarray,
+    cells_of: np.ndarray,
+    v_lists: Sequence[np.ndarray],
+    member_w: np.ndarray,
+    delta: float,
+    metric: str,
+    *,
+    config: EngineConfig = EngineConfig(),
+    data_w: Array | np.ndarray,
+    coords: Array | np.ndarray | None = None,
+    coords_w: Array | np.ndarray | None = None,
+) -> tuple[np.ndarray, VerifyStats]:
+    """Delta-vs-resident cross verify: W rows come from a whole-membership
+    matrix (|W|, p) over ``data_w`` (a routed query batch or an insertion
+    delta), V rows from the RESIDENT per-cell index lists. This is the one
+    tile path both the serving ``query_batch`` and the streaming
+    ``insert_batch`` stream through — one membership→w_lists derivation, so
+    the two callers can never disagree on how a routed row reaches a cell.
+    Pairs come back as (i ∈ resident, j ∈ delta), R×S semantics.
+    """
+    member_np = np.asarray(member_w, bool)
+    w_lists = [np.flatnonzero(member_np[:, h]) for h in range(len(v_lists))]
+    return verify_cell_lists(
+        data, np.asarray(cells_of), v_lists, w_lists, delta, metric,
+        config=config, data_w=data_w, coords=coords, coords_w=coords_w,
+    )
+
+
 def verify_pairs(
     data: Array | np.ndarray,
     cells: np.ndarray,

@@ -84,3 +84,74 @@ class TokenPipeline:
         axes = tuple(a for a in batch_axes if a in mesh.axis_names)
         sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
         return {k: jax.device_put(jnp.asarray(v), sharding) for k, v in g.items()}
+
+
+class StreamSource:
+    """Deterministic row stream feeding the incremental join layer
+    (``spjoin.join_incremental`` / ``MetricIndex.insert_batch``).
+
+    Same addressing contract as ``TokenPipeline``: row ``i`` is a PURE
+    FUNCTION of ``(seed, i)`` — ``np.random.SeedSequence([seed, i])`` —
+    so the GLOBAL row sequence is independent of how it is chopped into
+    insertion batches. That is exactly the property the streaming
+    exactness suite leans on: any batching of ``prefix(n)`` feeds the
+    incremental join the same rows a from-scratch join over ``prefix(n)``
+    sees, making "byte-identical pair sets under ANY batch split" a
+    well-posed claim (tests/test_incremental.py).
+
+    ``dist`` picks the per-row generator: "normal" | "uniform" |
+    "clustered" (rows drawn around ``n_clusters`` fixed centers — the
+    skewed arm the drift monitor is exercised on; center choice is part of
+    the per-row seed, so it too is split-invariant).
+    """
+
+    def __init__(
+        self,
+        n_features: int,
+        seed: int = 0,
+        dist: str = "normal",
+        n_clusters: int = 4,
+        scale: float = 1.0,
+    ):
+        if dist not in ("normal", "uniform", "clustered"):
+            raise ValueError(f"unknown stream dist {dist!r}")
+        self.n_features = n_features
+        self.seed = seed
+        self.dist = dist
+        self.scale = scale
+        # Cluster centers are a function of the seed alone (row index 2**62
+        # is reserved for them — far outside any realistic stream prefix).
+        if dist == "clustered":
+            rng = np.random.default_rng(np.random.SeedSequence([seed, 2**62]))
+            self.centers = rng.normal(size=(n_clusters, n_features)).astype(
+                np.float32
+            ) * np.float32(3.0 * scale)
+        else:
+            self.centers = None
+
+    def row(self, i: int) -> np.ndarray:
+        """Row ``i`` of the global stream — pure in (seed, i)."""
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, int(i)]))
+        if self.dist == "uniform":
+            x = rng.uniform(-1.0, 1.0, size=self.n_features) * self.scale
+        elif self.dist == "clustered":
+            c = self.centers[int(rng.integers(self.centers.shape[0]))]
+            x = c + rng.normal(size=self.n_features) * (0.3 * self.scale)
+        else:
+            x = rng.normal(size=self.n_features) * self.scale
+        return x.astype(np.float32)
+
+    def prefix(self, n: int) -> np.ndarray:
+        """The first ``n`` rows as one (n, m) array — what a from-scratch
+        join over the stream-so-far operates on."""
+        if n == 0:
+            return np.zeros((0, self.n_features), np.float32)
+        return np.stack([self.row(i) for i in range(n)])
+
+    def batch(self, start: int, size: int) -> np.ndarray:
+        """Rows [start, start + size) — one insertion batch. Chopping the
+        stream as batch(0, a), batch(a, b), ... reproduces prefix(a + b +
+        ...) row-for-row regardless of the split points."""
+        if size == 0:
+            return np.zeros((0, self.n_features), np.float32)
+        return np.stack([self.row(i) for i in range(start, start + size)])

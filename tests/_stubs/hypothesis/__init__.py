@@ -9,7 +9,7 @@ use:
 
   @given over positional/keyword strategies, @settings(max_examples,
   deadline) in either decorator order, assume(), and
-  strategies.{integers, floats, sampled_from, lists, text}.
+  strategies.{integers, floats, sampled_from, lists, sets, text, data}.
 
 Draws are deterministic (seeded per test function) so failures reproduce;
 there is no shrinking — the real library remains the CI gate.

@@ -92,3 +92,35 @@ def tuples(*strategies):
 
 def just(value):
     return SearchStrategy(lambda rng: value)
+
+
+def sets(elements, min_size=0, max_size=10, **_ignored):
+    def draw(rng):
+        size = rng.randint(int(min_size), int(max_size))
+        out = set()
+        for _ in range(100 * (size + 1)):
+            if len(out) >= size:
+                break
+            out.add(elements.example(rng))
+        if len(out) < int(min_size):
+            raise ValueError("sets: element strategy too narrow for min_size")
+        return out
+
+    return SearchStrategy(draw)
+
+
+class DataObject:
+    """Interactive-draw handle (the real library's ``st.data()`` surface):
+    every ``draw`` pulls from the SAME per-test deterministic stream, so
+    dependent draws (e.g. cut points bounded by an earlier size draw) stay
+    reproducible."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+
+def data():
+    return SearchStrategy(DataObject)

@@ -1,0 +1,428 @@
+"""ISSUE-8: incremental streaming joins, certified byte-identical.
+
+The contract under test: for a fixed seed and ANY split of R into insertion
+batches, the accumulated pair set (batch-0 build pairs ∪ every
+``insert_batch`` return) is BYTE-IDENTICAL to a from-scratch join over the
+concatenated rows — property-tested over random batch splits (1, 2, k,
+per-row) × every exact metric × both executors (host ``MetricIndex``; the
+kernel-metric subset additionally through ``DistIndex`` on a 1-device mesh
+inline and an 8-device mesh under the ``slow`` marker, subprocess-isolated).
+
+Also covered: the drift monitor's decision table (below-threshold → nothing;
+re-plan → static permutation, pairs unchanged, balance improves; re-sample →
+full rebuild, still exact), the no-build-reentry regression (module-attribute
+call counters prove ``insert_batch`` never calls sampling / anchor selection /
+partitioning unless re-sample fired), and the delta-radius / empty-delta /
+single-row edge cases.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model, index as index_lib, mapping, partition, spjoin
+from repro.core import placement as placement_lib
+from repro.data.pipeline import StreamSource
+from repro.kernels import ops as kops
+
+EXACT_METRICS = ["l1", "l2", "linf", "angular", "jaccard_minhash"]
+KERNEL_METRICS = [m for m in EXACT_METRICS if kops.supports_kernel(m)]
+DELTAS = {"l1": 2.0, "l2": 1.0, "linf": 0.6, "angular": 0.15,
+          "jaccard_minhash": 0.4}
+
+
+def _rows(seed, metric, n):
+    """Perturbed copies of a small base pool — within-base pairs sit well
+    inside δ for every metric (angular included, where iid normals in 4-d
+    almost never fall within 0.15), so the oracle is non-degenerate at any
+    n down to the per-row arm's 18 rows."""
+    rng = np.random.default_rng(seed)
+    if metric == "jaccard_minhash":
+        # within-base pairs differ in ≤ 2/16 signature slots (distance
+        # 0.125 ≤ δ); cross-base signatures almost never collide
+        base = rng.integers(0, 20, size=(max(n // 3, 1), 16)).astype(np.float32)
+        r = base[rng.integers(0, base.shape[0], size=n)]
+        flip = rng.integers(0, 16, size=n)
+        r[np.arange(n), flip] = rng.integers(20, 40, size=n)
+        return r.astype(np.float32)
+    base = rng.normal(size=(max(n // 3, 1), 4))
+    r = base[rng.integers(0, base.shape[0], size=n)]
+    r = r + 0.05 * rng.normal(size=r.shape)
+    return r.astype(np.float32)
+
+
+def _cfg(metric, **kw):
+    return spjoin.JoinConfig(delta=DELTAS[metric], metric=metric, k=48, p=8,
+                             n_dims=3, **kw)
+
+
+def _split(x, cuts):
+    """Chop (n, m) rows at the given sorted cut points."""
+    return [x[a:b] for a, b in zip([0, *cuts], [*cuts, x.shape[0]])]
+
+
+def _oracle(full, cfg):
+    return spjoin.brute_force_pairs(full, cfg.delta, cfg.metric)
+
+
+# ---------------------------------------------------------------------------
+# The exactness property: ANY batch split, host executor, every exact metric
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_any_split_byte_identical_host(data):
+    metric = data.draw(st.sampled_from(EXACT_METRICS))
+    seed = data.draw(st.integers(0, 10_000))
+    shape = data.draw(st.sampled_from(["one", "two", "k", "per_row"]))
+    n = 18 if shape == "per_row" else 48
+    full = _rows(seed, metric, n)
+    if shape == "one":
+        cuts = []
+    elif shape == "two":
+        cuts = [data.draw(st.integers(1, n - 1))]
+    elif shape == "k":
+        cuts = sorted(data.draw(st.sets(st.integers(1, n - 1), min_size=2,
+                                        max_size=5)))
+    else:
+        cuts = list(range(1, n))
+    cfg = _cfg(metric)
+    sess = spjoin.join_incremental(_split(full, cuts), cfg)
+    ref = _oracle(full, cfg)
+    assert ref.shape[0] > 0, "degenerate dataset: oracle found nothing"
+    assert sess.pairs.tobytes() == ref.tobytes(), (
+        f"split {cuts} diverged from from-scratch ({sess.pairs.shape} vs "
+        f"{ref.shape})"
+    )
+    assert sess.stats[0].action == "build"
+    assert sess.n_rows == n
+
+
+@pytest.mark.parametrize("metric", EXACT_METRICS)
+def test_incremental_matches_one_shot_join(metric, rng):
+    """The session is also byte-identical to ``spjoin.join`` itself (not
+    just the quadratic oracle) — the two executors share one answer."""
+    full = _rows(3, metric, 60)
+    cfg = _cfg(metric)
+    sess = spjoin.join_incremental(_split(full, [25, 40]), cfg)
+    one_shot = spjoin.join(full, cfg).pairs
+    assert sess.pairs.tobytes() == one_shot.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Distributed executor: delta rides the serve stage, V buffers stay pinned
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", KERNEL_METRICS)
+@pytest.mark.parametrize("cuts", [[30], [24, 40], [20, 30, 42]])
+def test_any_split_byte_identical_distributed(metric, cuts):
+    full = _rows(11, metric, 52)
+    cfg = _cfg(metric)
+    ref = _oracle(full, cfg)
+    assert ref.shape[0] > 0
+    batches = _split(full, cuts)
+    sess = spjoin.IncrementalJoin(cfg)
+    sess.insert(batches[0])
+    di = sess.index.to_distributed(jax.make_mesh((1,), ("data",)))
+    acc = [sess.pairs]
+    for b in batches[1:]:
+        pairs, stats = di.insert_batch(b)
+        acc.append(pairs)
+        assert stats.n_delta == b.shape[0]
+    got = np.unique(np.concatenate(acc), axis=0)
+    assert got.tobytes() == ref.tobytes()
+    # serving after growth answers over the FULL accumulated set
+    q = _rows(99, metric, 7)
+    truth = index_lib.brute_force_query(full, q, cfg.delta, metric)
+    assert di.query_batch(q).tobytes() == truth.tobytes()
+
+
+def test_distributed_and_host_streams_agree(rng):
+    """Same batches through both executors: identical per-batch returns,
+    identical drift telemetry (the dist mirror shares the host control
+    flow)."""
+    full = _rows(5, "l2", 50)
+    cfg = _cfg("l2")
+    batches = _split(full, [20, 35])
+    host = spjoin.IncrementalJoin(cfg)
+    host.insert(batches[0])
+    dist = spjoin.IncrementalJoin(cfg)
+    dist.insert(batches[0])
+    di = dist.index.to_distributed(jax.make_mesh((1,), ("data",)))
+    for b in batches[1:]:
+        hp, hs = host.index.insert_batch(b)
+        dp, ds = di.insert_batch(b)
+        assert hp.tobytes() == dp.tobytes()
+        assert (hs.action, hs.n_cross_pairs, hs.n_self_pairs) == (
+            ds.action, ds.n_cross_pairs, ds.n_self_pairs)
+        assert np.isclose(hs.drift, ds.drift)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_empty_delta_is_a_no_op(rng):
+    full = _rows(0, "l2", 40)
+    cfg = _cfg("l2")
+    sess = spjoin.join_incremental([full], cfg)
+    idx = sess.index
+    before = (idx.n_rows, idx.data.tobytes(), idx.placement)
+    pairs, stats = idx.insert_batch(np.zeros((0, 4), np.float32))
+    assert pairs.shape == (0, 2) and pairs.dtype == np.int64
+    assert stats.action == "none" and stats.n_delta == 0
+    assert (idx.n_rows, idx.data.tobytes()) == before[:2]
+    assert idx.placement is before[2]  # not even a re-plan
+    assert idx.n_batches == 0  # empty deltas don't count as batches
+
+
+def test_single_row_deltas_accumulate_exactly(rng):
+    full = _rows(7, "l1", 30)
+    cfg = _cfg("l1")
+    sess = spjoin.IncrementalJoin(cfg)
+    sess.insert(full[:20])
+    for i in range(20, 30):
+        pairs, stats = sess.insert(full[i : i + 1])
+        assert stats.n_delta == 1
+        # a single delta row can only create cross pairs, never ΔΔ ones
+        assert stats.n_self_pairs == 0
+    assert sess.pairs.tobytes() == _oracle(full, cfg).tobytes()
+
+
+def test_pairs_exactly_at_delta_radius_survive_the_stream(rng):
+    """D(x, y) == δ pairs (the ≤ boundary) must be found whether the two
+    rows arrive in one batch or are split across the stream."""
+    delta = 0.5  # exactly representable: no fp slop in the oracle either
+    base = rng.normal(size=(24, 4)).astype(np.float32)
+    probe = base[0].copy()
+    probe[0] += np.float32(delta)  # L∞ and L1 distance exactly δ from base[0]
+    full = np.concatenate([base, probe[None]])
+    for metric in ("l1", "linf"):
+        cfg = spjoin.JoinConfig(delta=delta, metric=metric, k=32, p=4, n_dims=3)
+        ref = spjoin.brute_force_pairs(full, delta, metric)
+        assert (ref == [0, 24]).all(1).any(), "boundary pair missing from oracle"
+        together = spjoin.join_incremental([full], cfg)
+        split = spjoin.join_incremental([full[:24], full[24:]], cfg)
+        assert together.pairs.tobytes() == ref.tobytes()
+        assert split.pairs.tobytes() == ref.tobytes()
+
+
+def test_insert_batch_validates_shapes(rng):
+    sess = spjoin.join_incremental([_rows(1, "l2", 30)], _cfg("l2"))
+    with pytest.raises(ValueError, match="insert_batch"):
+        sess.index.insert_batch(np.zeros((3, 9), np.float32))
+    with pytest.raises(ValueError, match="insert_batch"):
+        sess.index.insert_batch(np.zeros(4, np.float32))
+
+
+def test_stream_source_split_invariance():
+    src = StreamSource(4, seed=13, dist="clustered")
+    full = src.prefix(40)
+    chopped = np.concatenate([src.batch(0, 7), src.batch(7, 13), src.batch(20, 20)])
+    assert chopped.tobytes() == full.tobytes()
+    assert src.batch(5, 0).shape == (0, 4)
+    with pytest.raises(ValueError, match="dist"):
+        StreamSource(4, dist="cauchy")
+
+
+# ---------------------------------------------------------------------------
+# Regression: insert_batch never re-enters the build control plane
+# ---------------------------------------------------------------------------
+
+
+def _count_build_calls(monkeypatch):
+    counts = {"fit": 0, "draw": 0, "anchors": 0, "partition": 0}
+    wrap = lambda key, fn: (lambda *a, **k: (counts.__setitem__(key, counts[key] + 1), fn(*a, **k))[1])
+    monkeypatch.setattr(spjoin, "fit_node_stats", wrap("fit", spjoin.fit_node_stats))
+    monkeypatch.setattr(spjoin, "draw_pivots", wrap("draw", spjoin.draw_pivots))
+    monkeypatch.setattr(mapping, "select_anchors", wrap("anchors", mapping.select_anchors))
+    monkeypatch.setattr(partition, "build_partition", wrap("partition", partition.build_partition))
+    return counts
+
+
+def test_insert_batch_performs_no_sampling_or_partitioning(rng, monkeypatch):
+    counts = _count_build_calls(monkeypatch)
+    full = _rows(2, "l2", 45)
+    cfg = _cfg("l2")
+    sess = spjoin.IncrementalJoin(cfg)
+    sess.insert(full[:20])
+    after_build = dict(counts)
+    assert all(v == 1 for v in after_build.values()), after_build
+
+    # Thresholds pinned above any possible drift (TV distance ≤ 1): every
+    # insert — including ones that would naturally trip a re-plan — must
+    # stay entirely out of the build control plane.
+    sess2 = spjoin.IncrementalJoin(cfg, replan_drift=1.5, resample_drift=2.0)
+    sess2.index = sess.index
+    sess2._pairs = sess.pairs
+    sess2.insert(full[20:30])
+    sess2.insert(full[30:])
+    assert counts == after_build, f"insert_batch re-entered the build: {counts}"
+    assert sess2.pairs.tobytes() == _oracle(full, cfg).tobytes()
+
+
+def test_resample_is_the_only_path_back_into_the_build(rng, monkeypatch):
+    counts = _count_build_calls(monkeypatch)
+    full = _rows(4, "l2", 40)
+    cfg = _cfg("l2")
+    idx = index_lib.build_index(full[:25], cfg)
+    assert counts["draw"] == 1
+
+    # Forced re-sample (thresholds at 0 ⇒ any drift fires) WITH a rebuild
+    # config: the control plane runs exactly once more, and the stream stays
+    # exact afterwards.
+    pairs1, stats = idx.insert_batch(
+        full[25:], replan_drift=0.0, resample_drift=0.0, rebuild_cfg=cfg
+    )
+    assert stats.action == "resample" and not stats.resample_due
+    assert counts["draw"] == 2 and counts["partition"] == 2
+    base_pairs = spjoin.brute_force_pairs(full[:25], cfg.delta, cfg.metric)
+    got = np.unique(np.concatenate([base_pairs, pairs1]), axis=0)
+    assert got.tobytes() == _oracle(full, cfg).tobytes()
+    # the rebuilt index answers queries over the full set exactly
+    q = _rows(77, "l2", 9)
+    truth = index_lib.brute_force_query(full, q, cfg.delta, "l2")
+    assert idx.query_batch(q).tobytes() == truth.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Drift monitor: decision table + balance improvement
+# ---------------------------------------------------------------------------
+
+
+def test_drift_action_decision_table():
+    assert placement_lib.drift_action(0.0) == "none"
+    assert placement_lib.drift_action(placement_lib.REPLAN_DRIFT) == "replan"
+    assert placement_lib.drift_action(placement_lib.RESAMPLE_DRIFT) == "resample"
+    assert placement_lib.drift_action(0.3, 0.1, 0.5) == "replan"
+    assert placement_lib.drift_action(0.6, 0.1, 0.5) == "resample"
+    with pytest.raises(ValueError):
+        placement_lib.drift_action(0.2, replan_threshold=0.5, resample_threshold=0.1)
+
+
+def test_load_drift_metric_properties():
+    p = np.array([1.0, 2.0, 3.0])
+    assert cost_model.load_drift(p, p) == 0.0
+    assert cost_model.load_drift(p, 10 * p) == 0.0  # scale-free
+    assert cost_model.load_drift(np.array([1.0, 0.0]), np.array([0.0, 1.0])) == 1.0
+    assert cost_model.load_drift(np.zeros(3), np.zeros(3)) == 0.0
+    assert cost_model.load_drift(np.zeros(3), p) == 1.0
+    with pytest.raises(ValueError):
+        cost_model.load_drift(p, np.ones(4))
+
+
+def test_device_loads_under_matches_plan_on_its_own_loads():
+    loads = np.array([5.0, 1.0, 9.0, 2.0, 4.0, 7.0, 1.0, 3.0])
+    pl = placement_lib.plan_placement(loads, 4, strategy="lpt")
+    np.testing.assert_allclose(
+        placement_lib.device_loads_under(pl, loads), pl.device_loads
+    )
+
+
+def test_below_threshold_drift_fires_nothing(rng):
+    full = _rows(21, "l2", 44)
+    cfg = _cfg("l2")
+    sess = spjoin.IncrementalJoin(cfg, replan_drift=0.999, resample_drift=1.0)
+    sess.insert(full[:30])
+    plan_before = sess.index.placement
+    _, stats = sess.index.insert_batch(full[30:], replan_drift=0.999,
+                                       resample_drift=1.0)
+    assert stats.action == "none" and not stats.resample_due
+    assert sess.index.placement is plan_before  # untouched, not even rebuilt
+    assert 0.0 <= stats.drift < 0.999
+
+
+def test_replan_fires_on_drift_improves_balance_and_keeps_pairs(rng):
+    """The skew arm: the stream starts in one cluster and drifts into
+    another — observed loads leave the build-time prediction, the cheap
+    action fires, per-device balance improves, and the pair set is the
+    byte-identical from-scratch answer (a re-plan is a static permutation;
+    it can never touch WHICH pairs exist)."""
+    src = StreamSource(4, seed=3, dist="clustered", n_clusters=3)
+    head = src.prefix(60)
+    drift_rng = np.random.default_rng(17)
+    # the shifted tail: everything lands far from the head's mass
+    tail = (head[:30] + np.float32(4.0)).astype(np.float32)
+    tail += drift_rng.normal(scale=0.05, size=tail.shape).astype(np.float32)
+    full = np.concatenate([head, tail])
+    cfg = spjoin.JoinConfig(delta=1.0, metric="l2", k=64, p=8, n_dims=3)
+    sess = spjoin.IncrementalJoin(cfg)
+    sess.insert(head)
+    pairs, stats = sess.index.insert_batch(tail)  # default thresholds
+    sess._pairs = np.unique(np.concatenate([sess.pairs, pairs]), axis=0)
+    assert stats.drift >= placement_lib.REPLAN_DRIFT, stats.drift
+    assert stats.action in ("replan", "resample")
+    if stats.action == "replan":
+        assert stats.balance_std_after <= stats.balance_std_before
+    assert sess.pairs.tobytes() == _oracle(full, cfg).tobytes()
+
+
+def test_resample_worthy_drift_without_config_downgrades_to_replan(rng):
+    full = _rows(9, "l2", 40)
+    cfg = _cfg("l2")
+    sess = spjoin.IncrementalJoin(cfg)
+    sess.insert(full[:25])
+    _, stats = sess.index.insert_batch(full[25:], replan_drift=0.0,
+                                       resample_drift=0.0)  # no rebuild_cfg
+    assert stats.action == "replan" and stats.resample_due
+    # a re-plan re-scored the placement on the observed loads
+    assert stats.balance_std_after <= stats.balance_std_before + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# 8-device incremental identity (slow tier, subprocess-isolated)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_incremental_identity_8dev_subprocess():
+    """The full streaming loop on an 8-device mesh: build 4-dev index, pin
+    on 8 (cheap re-plan), stream three deltas through the serve-stage cross
+    path, accumulated pairs byte-identical to the quadratic oracle."""
+    prog = "import os\nos.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n" + textwrap.dedent("""
+    import json, numpy as np, jax
+    from repro.core import index as index_lib, spjoin
+    rng = np.random.default_rng(0)
+    full = rng.normal(size=(700, 6)).astype(np.float32)
+    cfg = spjoin.JoinConfig(delta=1.0, metric="l2", k=128, p=16, n_dims=4)
+    idx = index_lib.build_index(full[:400], cfg, n_devices=4)
+    base = spjoin.brute_force_pairs(full[:400], cfg.delta, cfg.metric)
+    mesh = jax.make_mesh((8,), ("data",))
+    di = idx.to_distributed(mesh)
+    acc = [base]
+    actions = []
+    for lo, hi in ((400, 550), (550, 650), (650, 700)):
+        pairs, stats = di.insert_batch(full[lo:hi])
+        acc.append(pairs)
+        actions.append(stats.action)
+    got = np.unique(np.concatenate(acc), axis=0)
+    ref = spjoin.brute_force_pairs(full, cfg.delta, cfg.metric)
+    q = rng.normal(size=(120, 6)).astype(np.float32)
+    truth = index_lib.brute_force_query(full, q, cfg.delta, "l2")
+    print(json.dumps({
+        "identical": bool(np.array_equal(got, ref)),
+        "serve_exact": bool(np.array_equal(di.query_batch(q), truth)),
+        "n_pairs": int(ref.shape[0]),
+        "actions": actions,
+    }))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.splitlines()[-1])
+    assert res["identical"] and res["serve_exact"]
+    assert res["n_pairs"] > 0

@@ -164,6 +164,66 @@ def test_load_rejects_foreign_or_corrupt_artifacts(rng, tmp_path):
         index_lib.MetricIndex.load(path)
 
 
+def test_manifest_carries_incremental_counters(rng, tmp_path):
+    r, _ = _dataset(rng, "l2")
+    idx = _build(r, "l2", 1.0)
+    idx.insert_batch(rng.normal(size=(40, 5)).astype(np.float32))
+    man = idx.manifest()
+    inc = man["incremental"]
+    assert inc["n_base"] == 260 and inc["n_inserted"] == 40
+    assert inc["n_base"] + inc["n_inserted"] == man["n_rows"]
+    assert inc["n_batches"] == 1
+
+
+def test_save_insert_load_insert_byte_identity(rng, tmp_path):
+    """The ISSUE-8 round trip: save mid-stream, load, keep inserting — the
+    loaded index's continuation is byte-identical to the uninterrupted one
+    (arrays, observed_w drift state, emitted pairs, final answers)."""
+    r = rng.normal(size=(200, 5)).astype(np.float32)
+    d1 = rng.normal(size=(50, 5)).astype(np.float32)
+    d2 = rng.normal(size=(30, 5)).astype(np.float32)
+    live = _build(r, "l2", 1.0)
+    p1_live, _ = live.insert_batch(d1)
+    path = live.save(str(tmp_path / "stream"))
+
+    loaded = index_lib.MetricIndex.load(path)
+    assert (loaded.n_base, loaded.n_inserted, loaded.n_batches) == (200, 50, 1)
+    for name in index_lib._ARRAYS:  # observed_w included since format v2
+        assert getattr(live, name).tobytes() == getattr(loaded, name).tobytes(), name
+
+    p2_live, s_live = live.insert_batch(d2)
+    p2_loaded, s_loaded = loaded.insert_batch(d2)
+    assert p2_live.tobytes() == p2_loaded.tobytes()
+    assert np.isclose(s_live.drift, s_loaded.drift)
+    assert s_live.action == s_loaded.action
+    full = np.concatenate([r, d1, d2])
+    q = rng.normal(size=(40, 5)).astype(np.float32)
+    truth = index_lib.brute_force_query(full, q, 1.0, "l2")
+    assert loaded.query_batch(q).tobytes() == truth.tobytes()
+
+
+def test_load_rejects_manifest_without_incremental_block(rng, tmp_path):
+    r, _ = _dataset(rng, "l1")
+    path = _build(r, "l1", 2.0).save(str(tmp_path / "idx"))
+    mpath = os.path.join(path, "manifest.json")
+    man = json.load(open(mpath))
+    man.pop("incremental")
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(index_lib.IndexFormatError, match="incremental"):
+        index_lib.MetricIndex.load(path)
+
+
+def test_load_rejects_inconsistent_stream_counters(rng, tmp_path):
+    r, _ = _dataset(rng, "l1")
+    path = _build(r, "l1", 2.0).save(str(tmp_path / "idx"))
+    mpath = os.path.join(path, "manifest.json")
+    man = json.load(open(mpath))
+    man["incremental"]["n_inserted"] = 7  # n_base + n_inserted != n_rows
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(index_lib.IndexMismatchError, match="stream"):
+        index_lib.MetricIndex.load(path)
+
+
 # ---------------------------------------------------------------------------
 # Regression: queries never re-enter the build control plane
 # ---------------------------------------------------------------------------

@@ -52,9 +52,16 @@ STREAM_SCOPES: dict[str, frozenset[str]] = {
         {"verify_cell_lists", "verify_pairs", "prune_band"}
     ),
     "repro/core/index.py": frozenset(
-        {"MetricIndex.route", "MetricIndex.query_batch", "MetricIndex.query"}
+        {
+            "MetricIndex.route",
+            "MetricIndex.query_batch",
+            "MetricIndex.query",
+            "MetricIndex.insert_batch",
+        }
     ),
-    "repro/core/distributed.py": frozenset({"DistIndex.query_batch"}),
+    "repro/core/distributed.py": frozenset(
+        {"DistIndex.query_batch", "DistIndex.insert_batch"}
+    ),
 }
 
 # Traced scopes the structural detector cannot see: closures RETURNED by a

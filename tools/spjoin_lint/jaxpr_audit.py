@@ -324,6 +324,18 @@ def repo_entries() -> list[dict]:
     fvi = jnp.zeros((pl.n_slots, 8), jnp.int32)
     entries.append(trace_entry("stage_serve", serve_fn, (fv, fvi, data, valid, ids)))
 
+    # ---- the incremental cross path (ISSUE-8): ΔR×R_old in
+    # ``DistIndex.insert_batch`` rides the SAME serve stage — the delta is
+    # the W batch, the resident V buffers stay pinned. Traced with a
+    # delta-sized batch so the contract (3 all_to_all, W side only, zero
+    # V-side bytes per insert) is pinned for the streaming entry point too;
+    # the [suffix] lookup maps it onto stage_serve's contracted counts.
+    d_rows = jnp.zeros((4, m), f32)
+    entries.append(trace_entry(
+        "stage_serve[incremental]", serve_fn,
+        (fv, fvi, d_rows, jnp.ones((4,), f32), jnp.arange(4, dtype=jnp.int32)),
+    ))
+
     return entries
 
 
