@@ -370,20 +370,40 @@ def run_verify_engine(n: int, delta: float) -> dict:
         t_eng = min(t_eng, time.perf_counter() - t0)
     assert np.array_equal(ref_pairs, eng_pairs), "engine != reference pairs"
 
-    # Pivot-filter pruning arm: same plan, mapped coords as the pre-mask.
-    # Hard invariant (the engine's soundness contract): pair set is
-    # byte-identical to the unpruned run.
-    pcfg = verify.EngineConfig(backend="numpy", prune="pivot")
+    # Emission/pruning arms on the same plan: the host mask-readback path
+    # with window pruning (compact and mask emission), plus the pivot-filter
+    # telemetry arm. Hard invariant (the engine's soundness contract): every
+    # arm's pair set is byte-identical to the unpruned mask run.
     xm_np = np.asarray(xm, np.float32)
-    t_prune, prune_pairs, pstats = float("inf"), None, None
-    for _ in range(2):
-        t0 = time.perf_counter()
-        prune_pairs, pstats = verify.verify_pairs(
-            allx, cells_np, member_np, cfg.delta, cfg.metric, config=pcfg,
-            coords=xm_np,
+
+    def _arm(prune: str, emit: str, coords=None, **tiles):
+        acfg = verify.EngineConfig(backend="numpy", prune=prune, emit=emit,
+                                   **tiles)
+        t_best, pairs_a, stats_a = float("inf"), None, None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            pairs_a, stats_a = verify.verify_pairs(
+                allx, cells_np, member_np, cfg.delta, cfg.metric, config=acfg,
+                coords=coords,
+            )
+            t_best = min(t_best, time.perf_counter() - t0)
+        assert pairs_a.tobytes() == eng_pairs.tobytes(), (
+            f"engine arm prune={prune} emit={emit} changed the pair set"
         )
-        t_prune = min(t_prune, time.perf_counter() - t0)
-    assert prune_pairs.tobytes() == eng_pairs.tobytes(), "prune changed pairs"
+        return t_best, stats_a
+
+    t_compact, _ = _arm("none", "compact")
+    # The headline fused arm: window pruning (host-side ordered windows +
+    # bounding-box skips — ZERO extra device lanes) + compact emission.
+    # tile_v=128 narrows each V band's surviving W window; the batched
+    # window dispatch keeps the smaller tiles from paying per-launch
+    # overhead (core.verify, *Batched window dispatch*).
+    _WTILES = dict(tile_v=128, tile_w=512)
+    t_prune_mask, pmstats = _arm("window", "mask", xm_np, **_WTILES)
+    t_prune, pstats = _arm("window", "compact", xm_np, **_WTILES)
+    # The pivot-filter telemetry arm (per-pair bound lanes + fused on-device
+    # compaction): exact per-pair pruning counts, block skips on Pallas.
+    t_pivot, pvstats = _arm("pivot", "compact", xm_np)
 
     return dict(
         n=n, delta=delta, n_pairs=int(eng_pairs.shape[0]),
@@ -392,12 +412,22 @@ def run_verify_engine(n: int, delta: float) -> dict:
         speedup=round(t_ref / max(t_eng, 1e-9), 2),
         n_tiles=stats.n_tiles, n_buckets=stats.n_buckets,
         occupancy=round(stats.occupancy, 3),
+        compact_s=round(t_compact, 3),
+        speedup_compact=round(t_eng / max(t_compact, 1e-9), 2),
+        prune=pstats.prune,
         pruned_s=round(t_prune, 3),
         speedup_prune=round(t_eng / max(t_prune, 1e-9), 2),
+        pruned_mask_s=round(t_prune_mask, 3),
+        speedup_prune_mask=round(t_eng / max(t_prune_mask, 1e-9), 2),
+        pruned_pivot_s=round(t_pivot, 3),
+        speedup_prune_pivot=round(t_eng / max(t_pivot, 1e-9), 2),
+        emit=pstats.emit,
+        n_overflow_retries=pvstats.n_overflow_retries,
         pruning_rate=round(pstats.prune_rate, 4),
+        pivot_pruning_rate=round(pvstats.prune_rate, 4),
         n_exact=pstats.n_exact,
-        n_tiles_pruned=pstats.n_tiles_pruned,
-        prune_identical=bool(prune_pairs.tobytes() == eng_pairs.tobytes()),
+        n_tiles_pruned=pmstats.n_tiles_pruned,
+        prune_identical=True,  # asserted per arm above (byte-identity)
     )
 
 
@@ -483,15 +513,30 @@ def run(n: int = 4000, delta: float = 6.0, n_verify: int = 20_000,
 
     engine = run_verify_engine(n_verify, delta)
     csv2 = Csv("bench_h3_verify.csv",
-               ["n", "reference_s", "engine_s", "pruned_s", "speedup",
-                "speedup_prune", "pruning_rate", "n_exact", "tiles",
-                "tiles_pruned", "buckets", "occupancy"])
+               ["n", "reference_s", "engine_s", "compact_s", "prune",
+                "pruned_mask_s", "pruned_s", "pruned_pivot_s", "speedup",
+                "speedup_prune", "speedup_prune_mask", "speedup_prune_pivot",
+                "emit", "n_overflow_retries", "pruning_rate",
+                "pivot_pruning_rate", "n_exact", "tiles", "tiles_pruned",
+                "buckets", "occupancy"])
     csv2.row(engine["n"], engine["reference_s"], engine["engine_s"],
-             engine["pruned_s"], engine["speedup"], engine["speedup_prune"],
-             engine["pruning_rate"], engine["n_exact"], engine["n_tiles"],
-             engine["n_tiles_pruned"], engine["n_buckets"],
-             engine["occupancy"])
+             engine["compact_s"], engine["prune"], engine["pruned_mask_s"],
+             engine["pruned_s"], engine["pruned_pivot_s"], engine["speedup"],
+             engine["speedup_prune"], engine["speedup_prune_mask"],
+             engine["speedup_prune_pivot"], engine["emit"],
+             engine["n_overflow_retries"], engine["pruning_rate"],
+             engine["pivot_pruning_rate"], engine["n_exact"],
+             engine["n_tiles"], engine["n_tiles_pruned"],
+             engine["n_buckets"], engine["occupancy"])
     csv2.close()
+    # The fused-engine acceptance gate: window pruning + compact emission
+    # must BEAT the unpruned mask engine on the SAME plan (the windowed
+    # mask-path and pivot-telemetry numbers ride along for the
+    # emission-path comparison).
+    assert engine["speedup_prune"] >= 1.0, (
+        f"fused engine arm regressed: speedup_prune={engine['speedup_prune']} "
+        f"(mask-path speedup_prune_mask={engine['speedup_prune_mask']})"
+    )
 
     map_phase = run_map_phase(n, delta)
     csv_map = Csv("bench_h3_map.csv",

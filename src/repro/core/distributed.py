@@ -478,6 +478,15 @@ class VerifyConfig:
     cap_v: int  # per-(cell, source-shard) kernel-row capacity
     cap_w: int  # per-(cell, source-shard) whole-row capacity
     emit_pairs: bool = False  # also return hit masks + id buffers (tests)
+    emit: str = "mask"  # pair-emission path when emit_pairs: "mask" returns
+    #   the per-slot hit masks + id buffers; "compact" compacts each slot's
+    #   hits in-trace (ref.compact_mask under vmap) into a static
+    #   (pair_cap, 2) global-id buffer + true-count — an output-sensitive
+    #   stage OUTPUT, not a new collective: the pairs ride the stage's
+    #   existing out_specs, the all_to_all budget is unchanged. A count
+    #   above pair_cap is the overflow sentinel (buffer unspecified, count
+    #   exact); the driver re-sizes and re-runs, mask path as last resort.
+    pair_cap: int = 0  # static per-slot pair capacity (emit="compact" only)
     backend: str = "auto"  # numpy | pallas | auto (see kernels.ops)
     use_kernel: bool | None = None  # legacy override of backend
     prune: str = "none"  # pivot-filter pruning: "none" | "pivot"
@@ -536,7 +545,14 @@ def make_stage_verify(
     cap_v, cap_w = vcfg.cap_v, vcfg.cap_w
     map_fused = vcfg.map_fused
     backend = kops.resolve_backend(vcfg.backend, plan.metric, vcfg.use_kernel)
+    if vcfg.prune == "window":
+        # Host-streamed range pruning has no analogue inside a static
+        # shard_map trace; the distributed stage filters per pair.
+        raise ValueError('the distributed stage supports prune="none" | "pivot"')
     prune = verify_lib.resolve_prune(vcfg.prune, plan.metric, True)
+    emit = verify_lib.resolve_emit(vcfg.emit, plan.metric) if vcfg.emit_pairs else "mask"
+    if emit == "compact" and vcfg.pair_cap < 1:
+        raise ValueError('emit="compact" needs pair_cap >= 1 (a static out-shape)')
     n_dims = plan.anchors.shape[0]
     delta_bound = vcfg.delta_bound  # static — shared by mask + telemetry
 
@@ -596,9 +612,20 @@ def make_stage_verify(
             "overflow": overflow.astype(jnp.float32)[None],
         }
         if vcfg.emit_pairs:
-            out["masks"] = masks  # (spd, M*cap_v, M*cap_w)
-            out["v_ids"] = fvi
-            out["w_ids"] = fwi
+            if emit == "compact":
+                # Per-slot on-device compaction: masks are already validity-
+                # and de-dup-filtered (verify_tile -> ref.emit_mask), so the
+                # compaction just gathers global ids. Pure jnp, vmap-safe —
+                # the kernel dispatch and collective budget are untouched.
+                cpairs, ccounts = jax.vmap(
+                    lambda mk, vi, wi: kref.compact_mask(mk, vi, wi, vcfg.pair_cap)
+                )(masks, fvi, fwi)
+                out["pairs"] = cpairs  # (spd, pair_cap, 2) int32, -1 padded
+                out["pair_counts"] = ccounts  # (spd,) int32 TRUE totals
+            else:
+                out["masks"] = masks  # (spd, M*cap_v, M*cap_w)
+                out["v_ids"] = fvi
+                out["w_ids"] = fwi
         return out
 
     def payload(x: Array, xm: Array) -> Array:
@@ -645,7 +672,10 @@ def make_stage_verify(
         "overflow": P(axis),
     }
     if vcfg.emit_pairs:
-        out_specs.update({"masks": P(axis), "v_ids": P(axis), "w_ids": P(axis)})
+        if emit == "compact":
+            out_specs.update({"pairs": P(axis), "pair_counts": P(axis)})
+        else:
+            out_specs.update({"masks": P(axis), "v_ids": P(axis), "w_ids": P(axis)})
 
     shmap = compat.shard_map(
         per_shard,
@@ -699,6 +729,10 @@ class DistJoinResult:
     makespan_ratio: float = 1.0  # max/mean of measured per-device loads
     capacity_saved_bytes: int = 0  # dispatch-buffer bytes the plan saved
     #   vs the contiguous global-max layout (negative = plan spends more)
+    emit: str = "mask"  # pair-emission path the stage actually ran with
+    #   (after capability resolution and any overflow fallback)
+    n_overflow_retries: int = 0  # compact-emission stage re-runs forced by
+    #   the overflow sentinel (same counter semantics as VerifyStats)
 
 
 def _pad_shard_set(x: Array, M: int, sharding) -> tuple[Array, Array, Array, int]:
@@ -732,6 +766,7 @@ def distributed_join(
     partitioner: str = "learning",
     t_cells: int = 8,
     emit_pairs: bool = False,
+    emit: str = "mask",
     backend: str = "auto",
     use_kernel: bool | None = None,
     capacity_slack: float = 1.0,
@@ -780,6 +815,15 @@ def distributed_join(
     coordinate fp low bits may differ at box edges, which can move an object
     between adjacent cells without ever changing the emitted pair set (the
     join is exact under any containment-consistent assignment).
+
+    ``emit``: pair-emission path when ``emit_pairs`` — "mask" (default)
+    reads back the per-slot hit masks and compacts on the host; "compact"
+    compacts on device into static per-slot pair buffers sized from the
+    cost model's survival estimate (``VerifyConfig.emit``) and retries at
+    the next capacity bucket on overflow (the counter is exact), falling
+    back to "mask" after a bounded number of retries. Pair sets are
+    byte-identical either way; ``DistJoinResult.emit`` /
+    ``n_overflow_retries`` report what actually ran.
 
     ``placement``: "lpt" (default) | "contiguous" — the cell→device plan of
     the reduce phase (``core.placement``). "contiguous" is the historical
@@ -913,6 +957,8 @@ def distributed_join(
         partition.PartitionPlan(plan.kernel_lo, plan.kernel_hi, plan.whole_lo, plan.whole_hi, delta),
         piv_mapped,
     )
+    if prune == "window":
+        raise ValueError('distributed_join supports prune="none" | "pivot"')
     prune_resolved = verify_lib.resolve_prune(prune, metric, True)
     delta_bound = (
         verify_lib.prune_band(delta, metric, data, s_arr if cross else None)
@@ -950,16 +996,46 @@ def distributed_join(
     )
 
     # ---- dispatch + verify ---------------------------------------------------
+    # Compact emission: static per-slot pair capacity from the cost model's
+    # survival estimate (an overestimate of the hit rate — the safe
+    # direction), on the same quarter-pow2 bucket ladder as the engine.
+    emit_resolved = verify_lib.resolve_emit(emit, metric) if emit_pairs else "mask"
+    slot_area = max(int(v_slot.max(initial=0)) * int(w_slot.max(initial=0)), 1)
+    pair_cap = 0
+    if emit_resolved == "compact":
+        est = int(slot_area * min(predicted_survival * verify_lib.EMIT_SLACK, 1.0))
+        pair_cap = verify_lib.bucket_size(est + verify_lib._EMIT_FLOOR, slot_area)
     vcfg = VerifyConfig(
         cap_v=cap_v, cap_w=cap_w, emit_pairs=emit_pairs, backend=backend,
         prune=prune, delta_bound=delta_bound, map_fused=map_fused,
+        emit=emit_resolved, pair_cap=pair_cap,
     )
-    verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross, pl=pl)
-    out = (
-        verify_fn(data, valid, ids, s_arr, valid_s, ids_s)
-        if cross
-        else verify_fn(data, valid, ids)
-    )
+    n_overflow_retries = 0
+    for attempt in range(verify_lib._MAX_OVERFLOW_RETRIES + 2):
+        verify_fn = make_stage_verify(mesh, axis, plan, vcfg, cross=cross, pl=pl)
+        out = (
+            verify_fn(data, valid, ids, s_arr, valid_s, ids_s)
+            if cross
+            else verify_fn(data, valid, ids)
+        )
+        if vcfg.emit != "compact":
+            break
+        max_count = int(np.asarray(out["pair_counts"]).max(initial=0))
+        if max_count <= vcfg.pair_cap:
+            break
+        # Overflow sentinel: the counts are TRUE totals, so one re-size is
+        # exact; a bounded ladder guards monkeypatched/adversarial sizing,
+        # then the mask path — emitted pairs are identical on every rung.
+        n_overflow_retries += 1
+        if attempt >= verify_lib._MAX_OVERFLOW_RETRIES:
+            vcfg = dataclasses.replace(vcfg, emit="mask", pair_cap=0)
+        else:
+            vcfg = dataclasses.replace(
+                vcfg,
+                pair_cap=verify_lib.bucket_size(
+                    max(max_count, 2 * vcfg.pair_cap), slot_area
+                ),
+            )
 
     # Per-slot telemetry (dispatch order) folds back to cells and devices.
     per_slot = np.asarray(out["per_cell_verified"]).reshape(-1)  # (n_slots,)
@@ -972,7 +1048,21 @@ def distributed_join(
     padding = (pl.n_slots * M * (cap_v + cap_w)) / max(actual_v + actual_w, 1)
 
     pairs = None
-    if emit_pairs:
+    if emit_pairs and vcfg.emit == "compact":
+        # (M*spd, pair_cap, 2) compacted global-id pairs + per-slot counts;
+        # rows past each slot's count are -1 padding (or, pre-retry,
+        # unspecified) and are sliced off here.
+        cpairs = np.asarray(out["pairs"]).reshape(-1, vcfg.pair_cap, 2)
+        ccounts = np.asarray(out["pair_counts"]).reshape(-1)
+        rows = [cp[:c] for cp, c in zip(cpairs, ccounts) if c]
+        if rows:
+            pr = np.concatenate(rows).astype(np.int64)
+            if not cross:
+                pr = np.stack([pr.min(axis=1), pr.max(axis=1)], 1)
+            pairs = np.unique(pr, axis=0)
+        else:
+            pairs = np.zeros((0, 2), np.int64)
+    elif emit_pairs:
         masks = np.asarray(out["masks"])  # (M*spd, Mcap_v, Mcap_w) flattened over devices
         v_ids = np.asarray(out["v_ids"]).reshape(masks.shape[0], -1)
         w_ids = np.asarray(out["w_ids"]).reshape(masks.shape[0], -1)
@@ -1010,6 +1100,8 @@ def distributed_join(
         balance_std=float(device_loads.std()),
         makespan_ratio=float(device_loads.max() / max(device_loads.mean(), 1e-9)),
         capacity_saved_bytes=int(cap_saved),
+        emit=vcfg.emit if emit_pairs else "mask",
+        n_overflow_retries=n_overflow_retries,
     )
 
 
@@ -1151,6 +1243,8 @@ class DistIndex:
             )
         M = mesh.shape[axis]
         backend = kops.resolve_backend(index.backend, index.metric)
+        if index.prune == "window":
+            raise ValueError('distributed serving supports prune="none" | "pivot"')
         prune = verify_lib.resolve_prune(index.prune, index.metric, True)
         pl = index.placement
         if pl.n_devices != M:

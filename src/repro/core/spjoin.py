@@ -55,8 +55,13 @@ class JoinConfig:
     backend: str = "auto"  # verify engine: numpy | pallas | auto
     tile_v: int = 1024  # verify engine streaming tile (V side)
     tile_w: int = 4096  # verify engine streaming tile (W side)
-    prune: str = "pivot"  # pivot-filter pruning: "pivot" | "none" (sound for
-    #   true metrics; cosine resolves back to "none" — see core.verify)
+    prune: str = "pivot"  # pivot-filter pruning: "pivot" | "window" | "none"
+    #   ("window" = host-side range/tile pruning only — the wall-clock mode;
+    #   sound for true metrics; cosine resolves back to "none" — core.verify)
+    emit: str = "mask"  # verify-engine emission path: "mask" | "compact"
+    #   (fused on-device pair compaction; reference-only metrics resolve
+    #   back to "mask" — see core.verify, *Emission paths*). Pair sets are
+    #   byte-identical either way.
     map_fused: bool = True  # single-pass map kernel (kernels.ops.map_assign);
     #   metrics without a kernel fall back to the two-pass path (capability,
     #   like backend dispatch). False: always the legacy two-pass path.
@@ -74,7 +79,7 @@ class JoinConfig:
     def engine_config(self) -> verify_lib.EngineConfig:
         return verify_lib.EngineConfig(
             backend=self.backend, tile_v=self.tile_v, tile_w=self.tile_w,
-            prune=self.prune,
+            prune=self.prune, emit=self.emit,
         )
 
 

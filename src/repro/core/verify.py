@@ -59,17 +59,70 @@ candidate filter, run BEFORE any exact metric evaluation):
   * Capability, not error: metrics without the triangle inequality (cosine,
     dot) silently resolve to ``prune="none"`` — same treatment as backends
     without a kernel.
+  * Window refinement (paper §5's ordered-range pruning): with pruning on,
+    each cell's V and W lists are ordered by their first mapped coordinate,
+    and a binary search slices each V tile's W range down to the
+    ``± delta_bound`` window — rows outside it already exceed the L∞ lower
+    bound on that single coordinate, so they are pruned before any gather
+    or device dispatch ever happens. On top of the window, whole W tiles
+    whose coordinate bounding box is farther than ``delta_bound`` from the
+    V tile's box on ANY coordinate are skipped the same way (interval
+    arithmetic on host-side min/max — every pair in such a tile provably
+    fails the L∞ bound).
+
+Two prune modes share that machinery:
+
+  * ``prune="pivot"`` — windows + the per-PAIR bound mask above. Exact
+    per-pair pruning telemetry (``n_pruned`` counts every bound-failing
+    pair), and on the Pallas backend the fused kernel skips exact work for
+    all-pruned blocks. The per-pair mask costs O(tile·n) extra lanes on
+    backends that cannot skip them, so this mode optimizes telemetry and
+    accelerator block-skipping, not host wall-clock.
+  * ``prune="window"`` — windows + bounding-box tile skips ONLY: all
+    pruning happens on the host BEFORE gather/dispatch, cutting real
+    dispatch area with zero extra per-pair lanes. ``n_pruned`` counts the
+    window/box-pruned pairs (a subset of what "pivot" would count). This
+    is the wall-clock mode: the pruned arm does strictly less device work
+    than ``prune="none"``.
+
+Emission paths (``EngineConfig.emit``):
+
+  * ``"mask"``: the original per-tile (cap_v, cap_w) hit mask is read back
+    and compacted on the host (``np.nonzero`` + gather).
+  * ``"compact"``: the fused verify+compaction tile
+    (``ref.verify_compact`` / ``kernels.compact``) emits an on-device
+    prefix-sum-compacted (capacity, 2) id-pair buffer plus a true-total
+    counter — the readback is output-sensitive, O(capacity) instead of
+    O(tile area). Capacity is seeded from the cost model's survival
+    estimate on a quarter-pow2 bucket ladder; a counter above capacity is
+    the overflow sentinel and the engine retries that tile at the exact
+    next bucket (the counter is the true total), with a bounded number of
+    retries and the mask path as last-resort fallback. Fixed-seed pair
+    sets are byte-identical to ``emit="mask"`` on every metric, backend
+    and executor. Reference-only metrics (no fused tile) resolve back to
+    ``"mask"`` — capability, not error.
+
+Emission lowering is a BACKEND decision: the pair-buffer contract above is
+what crosses the tile boundary, not a prescribed instruction sequence. The
+Pallas backend (and the "pivot" prune mode, whose survivor count rides the
+buffer's counter row) runs the true fused prefix-sum compaction
+(``kernels.compact`` / the ``ref.verify_compact`` oracle). The numpy
+backend outside "pivot" mode has no device boundary to compact across —
+host and "device" memory are the same arena — so the engine lowers compact
+emission to the mask dispatch plus a host pack of the identical buffer
+contents; same pairs, same counters, none of the O(area) prefix-sum work
+that only pays off across a real DMA boundary.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances
+from repro.core import cost_model, distances
 from repro.kernels import ops as kops
 from repro.kernels import ref
 
@@ -87,10 +140,17 @@ class EngineConfig:
     ``tile_v`` / ``tile_w``: streaming tile capacity (rows per side). Peak
     per-tile footprint ≈ tile_v·tile_w bytes of mask + gathered rows.
     ``min_bucket``: smallest padded tile side; tiles below it still pad up.
-    ``prune``: "none" | "pivot" — pivot-filter pruning (L∞ lower bound over
-    mapped coordinates, module docstring). "pivot" requires the caller to
-    pass ``coords`` (and ``coords_w`` in R×S mode); metrics without the
-    triangle inequality resolve back to "none" (capability, not error).
+    ``prune``: "none" | "pivot" | "window" — pivot-filter pruning (L∞ lower
+    bound over mapped coordinates, module docstring). "pivot" adds the
+    per-pair bound mask (exact telemetry, Pallas block-skips); "window"
+    prunes only at range/tile granularity before dispatch (the wall-clock
+    mode). Both require the caller to pass ``coords`` (and ``coords_w`` in
+    R×S mode); metrics without the triangle inequality resolve back to
+    "none" (capability, not error).
+    ``emit``: "mask" | "compact" — how a tile's hits come back to the host
+    (module docstring, *Emission paths*). "compact" reads back an on-device
+    prefix-sum-compacted pair buffer instead of the full tile mask;
+    reference-only metrics resolve back to "mask" (capability, not error).
     """
 
     backend: str = "auto"
@@ -98,6 +158,7 @@ class EngineConfig:
     tile_w: int = 4096
     min_bucket: int = 8
     prune: str = "none"
+    emit: str = "mask"
 
 
 @dataclasses.dataclass
@@ -109,6 +170,19 @@ class VerifyStats:
     modes; ``n_exact`` is the subset that actually reached exact metric
     evaluation after the pivot filter (== n_verifications when pruning is
     off).
+
+    Emission invariance: ``n_verifications``, ``n_hits`` and ``n_pruned``
+    (hence ``prune_rate`` / ``n_exact``) are IDENTICAL across ``emit`` modes
+    by construction. The dispatch-schedule counters — ``n_tiles``,
+    ``n_padded``, ``n_dispatched``, ``n_tiles_pruned`` — legitimately
+    differ: compact emission never host-skips a tile in "pivot" mode (its
+    filter runs fused in-kernel), and with windowed pruning all-pruned V
+    tiles never materialize W tiles at all.
+
+    Prune-mode semantics of ``n_pruned``: "pivot" counts every pair the L∞
+    bound eliminates (per-pair mask); "window" counts the pairs eliminated
+    at range/tile granularity — a provable-non-hit SUBSET of the former, so
+    ``n_exact`` is an upper bound on exact evaluations in window mode.
     """
 
     n_verifications: int = 0  # Σ_h |V_h|·|W_h| (valid pair area)
@@ -117,9 +191,11 @@ class VerifyStats:
     n_tiles: int = 0  # tiles that ran exact evaluation
     n_cells: int = 0  # non-empty cells
     n_hits: int = 0  # emitted (de-duplicated) hits
-    n_pruned: int = 0  # valid pairs eliminated by the pivot filter
+    n_pruned: int = 0  # valid pairs eliminated by the pivot filter / windows
     n_tiles_pruned: int = 0  # tiles skipped outright (every pair pruned)
+    n_overflow_retries: int = 0  # compact-emission re-dispatches (overflow sentinel)
     prune: str = "none"  # resolved prune mode the engine actually ran
+    emit: str = "mask"  # resolved emission path the engine actually ran
     bucket_shapes: set = dataclasses.field(default_factory=set)
 
     @property
@@ -167,13 +243,12 @@ def apply_dedup(
     R×S (``cross=True``): V and W rows index different sets, so no symmetric
     duplicate exists — every valid hit is emitted (each R row has exactly one
     kernel cell, hence each cross pair is verified exactly once).
+
+    The rule itself lives in :func:`ref.emit_mask` — the single owner both
+    emission paths (this mask path and the fused compaction tile) delegate
+    to, so they cannot diverge on emission semantics.
     """
-    if cross:
-        return hits & pair_validity(vids, wids)
-    emit = (wcells[None, :] > cell_id) | (
-        (wcells[None, :] == cell_id) & (vids[:, None] < wids[None, :])
-    )
-    return hits & pair_validity(vids, wids) & emit
+    return hits & ref.emit_mask(vids, wids, wcells, cell_id, cross=cross)
 
 
 def verify_tile(
@@ -263,22 +338,98 @@ def prune_supported(metric: str) -> bool:
 
 
 def resolve_prune(prune: str, metric: str, have_coords: bool) -> str:
-    """Resolve a prune request to a concrete "none" | "pivot".
+    """Resolve a prune request to a concrete "none" | "pivot" | "window".
 
     Mirrors :func:`resolve_engine_backend`: a metric the filter is unsound
     for (no triangle inequality) falls back to "none" — capability, not
-    error. Requesting "pivot" WITHOUT mapped coordinates, however, is a
+    error. Requesting pruning WITHOUT mapped coordinates, however, is a
     caller bug and raises.
     """
-    if prune not in ("none", "pivot"):
-        raise ValueError(f'unknown prune mode {prune!r}; expected "none" | "pivot"')
-    if prune == "pivot" and not have_coords:
+    if prune not in ("none", "pivot", "window"):
         raise ValueError(
-            'prune="pivot" requires the mapped coordinates (coords / coords_w)'
+            f'unknown prune mode {prune!r}; expected "none" | "pivot" | "window"'
         )
-    if prune == "pivot" and not prune_supported(metric):
+    if prune != "none" and not have_coords:
+        raise ValueError(
+            f'prune={prune!r} requires the mapped coordinates (coords / coords_w)'
+        )
+    if prune != "none" and not prune_supported(metric):
         return "none"
     return prune
+
+
+def resolve_emit(emit: str, metric: str) -> str:
+    """Resolve an emission request to a concrete "mask" | "compact".
+
+    Mirrors :func:`resolve_engine_backend` / :func:`resolve_prune`: compact
+    emission needs the fused verify+compaction tile, which exists for the
+    exact-metric set (``ref.METRICS``); reference-only metrics (angular,
+    jaccard_minhash) resolve back to "mask" — capability, not error.
+    """
+    if emit not in ("mask", "compact"):
+        raise ValueError(f'unknown emit mode {emit!r}; expected "mask" | "compact"')
+    if emit == "compact" and metric not in ref.METRICS:
+        return "mask"
+    return emit
+
+
+def verify_tile_compact(
+    xv: Array,
+    xw: Array,
+    vids: Array,
+    wids: Array,
+    wcells: Array,
+    cell_id,
+    *,
+    delta: float,
+    metric: str,
+    backend: str,
+    capacity: int,
+    cross: bool = False,
+    pv: Array | None = None,
+    pw: Array | None = None,
+    prune: str = "none",
+    delta_bound: float | None = None,
+) -> Array:
+    """One tile's fused verify + on-device pair compaction, packed for ONE
+    host readback.
+
+    Same contract as :func:`verify_tile` on the verify side (filter,
+    distances, threshold, validity, min-cell de-dup — all shared with the
+    mask path through ``ref``), but instead of the (cap_v, cap_w) hit mask
+    it returns a single (capacity + 1, 2) int32 array:
+
+      * rows ``[0:capacity]`` — compacted (v_id, w_id) GLOBAL id pairs,
+        padded with -1; emission order is unspecified (backends differ),
+        the caller order-normalizes.
+      * row ``capacity``     — ``[count, n_cand]``: the TRUE number of
+        emitted pairs (``count > capacity`` is the overflow sentinel: the
+        buffer contents are then unspecified but ``count`` is exact, so the
+        retry capacity can be sized in one step) and the pivot-filter
+        survivor count (== valid pair count when pruning is off), so the
+        pruning telemetry needs no second readback.
+
+    ``capacity`` must be static (it is an output shape); bucket it with
+    :func:`bucket_size` so XLA's compile cache covers the tile stream.
+    """
+    if prune == "pivot":
+        assert pv is not None and pw is not None, 'prune="pivot" without coords'
+    else:
+        pv = pw = None
+    if backend == "pallas":
+        pairs, count, n_cand = kops.verify_compact(
+            xv, xw, vids, wids, wcells, cell_id, pv, pw,
+            delta=delta, metric=metric, capacity=capacity, cross=cross,
+            delta_bound=delta_bound, use_kernel=True,
+        )
+    else:
+        pairs, count, n_cand = ref.verify_compact(
+            xv, xw, vids, wids, wcells, cell_id,
+            delta=delta, metric=metric, capacity=capacity, cross=cross,
+            px=pv, py=pw, delta_bound=delta_bound,
+        )
+    tail = jnp.stack([count, n_cand]).astype(jnp.int32)[None, :]
+    return jnp.concatenate([pairs, tail], axis=0)
 
 
 def candidate_mask(
@@ -324,6 +475,13 @@ _tile_verify = jax.jit(
 
 _tile_candidates = jax.jit(candidate_mask, static_argnames=("delta", "delta_bound"))
 
+_tile_compact = jax.jit(
+    verify_tile_compact,
+    static_argnames=(
+        "delta", "metric", "backend", "capacity", "cross", "prune", "delta_bound",
+    ),
+)
+
 
 # ---------------------------------------------------------------------------
 # Capacity bucketing
@@ -356,6 +514,187 @@ def _pad_gather(
     ids = np.full((cap,), -1, np.int64)
     ids[:a] = idx
     return rows, ids
+
+
+def _pad_rows(
+    rows: np.ndarray, ids: np.ndarray, cap: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad pre-gathered rows (a contiguous slice) into a (cap, m) buffer;
+    ids pad = -1. The slice-copy twin of :func:`_pad_gather` — the windowed
+    prune modes gather each cell ONCE and tile by slicing, so the per-tile
+    cost is a memcpy, not a fancy index."""
+    a = ids.size
+    buf = np.zeros((cap, rows.shape[1]), rows.dtype)
+    buf[:a] = rows
+    out_ids = np.full((cap,), -1, np.int64)
+    out_ids[:a] = ids
+    return buf, out_ids
+
+
+def _prep_w_tiles(
+    w_sub: np.ndarray,
+    data_w_np: np.ndarray,
+    cells_np: np.ndarray,
+    coords_w_np: np.ndarray | None,
+    cross: bool,
+    config: EngineConfig,
+) -> list[tuple]:
+    """Gather + pad a W-side index range into padded tiles (host-side numpy).
+
+    Returns ``[(wt, cap_w, xw, wids, wc, pw, wbox), ...]`` — one entry per
+    ``tile_w`` slice; ``pw`` is None unless mapped coordinates are given,
+    ``wbox`` (coordinate bounding box) is None here (no-prune path).
+    """
+    tiles = []
+    for w0 in range(0, w_sub.size, config.tile_w):
+        wt = w_sub[w0 : w0 + config.tile_w]
+        cap_w = bucket_size(wt.size, config.tile_w, config.min_bucket)
+        xw, wids = _pad_gather(data_w_np, wt, cap_w)
+        wc = np.full((cap_w,), -1, np.int64)
+        if not cross:  # W kernel cells only exist / matter for self-join
+            wc[: wt.size] = cells_np[wt]
+        pw = None
+        if coords_w_np is not None:
+            pw = _pad_gather(coords_w_np, wt, cap_w)[0]
+        tiles.append((wt, cap_w, xw, wids, wc, pw, None))
+    return tiles
+
+
+def _prep_w_tiles_sorted(
+    w_idx: np.ndarray,
+    w_data: np.ndarray,
+    w_cells: np.ndarray | None,
+    w_coords: np.ndarray,
+    lo: int,
+    hi: int,
+    config: EngineConfig,
+    need_pw: bool,
+) -> list[tuple]:
+    """Windowed-mode tile prep over the per-cell PRE-SORTED buffers: the
+    [lo, hi) window is contiguous in every buffer, so each tile is a slice
+    copy plus its coordinate bounding box (for the bbox skip) — no per-tile
+    fancy gather. Same tuple layout as :func:`_prep_w_tiles`."""
+    tiles = []
+    for w0 in range(lo, hi, config.tile_w):
+        w1 = min(w0 + config.tile_w, hi)
+        wt = w_idx[w0:w1]
+        cap_w = bucket_size(w1 - w0, config.tile_w, config.min_bucket)
+        xw, wids = _pad_rows(w_data[w0:w1], wt, cap_w)
+        wc = np.full((cap_w,), -1, np.int64)
+        if w_cells is not None:  # self-join: kernel cell per W row
+            wc[: w1 - w0] = w_cells[w0:w1]
+        cw = w_coords[w0:w1]
+        pw = _pad_rows(cw, wt, cap_w)[0] if need_pw else None
+        tiles.append((wt, cap_w, xw, wids, wc, pw, (cw.min(axis=0), cw.max(axis=0))))
+    return tiles
+
+
+# --- Compact-emission capacity sizing --------------------------------------
+#
+# The pair buffer's capacity is a STATIC output shape, so it rides the same
+# quarter-pow2 bucket ladder as the tile sides. It is seeded from the cost
+# model's bound-survival estimate (an overestimate of the hit rate, hence a
+# conservative buffer), padded by a slack factor, floored, and grown online
+# from observed per-tile counts. All knobs are module-level on purpose —
+# tests monkeypatch them to force the overflow→retry→fallback ladder.
+
+DEFAULT_EMIT_RATE = 0.05  # prior hit fraction when no coordinate sample exists
+EMIT_SLACK = 2.0  # capacity head-room multiplier over the estimated rate
+_EMIT_FLOOR = 32  # minimum pre-bucket capacity, absorbs tiny-tile noise
+_EMIT_SAMPLE = 256  # rows fed to the survival estimate (O(sample^2) pairs)
+_MAX_OVERFLOW_RETRIES = 3  # capacity doublings before the mask-path fallback
+
+
+# --- Batched window dispatch ------------------------------------------------
+#
+# prune="window" cuts tiles small by design (the surviving W window shrinks
+# with tile_v), so a per-tile Python->XLA dispatch would swallow the pruned
+# area in launch overhead. The jnp window path therefore DEFERS its tiles and
+# verifies every same-bucket batch in one vmapped call: one dispatch and one
+# host readback per bucket shape per flush, not per tile. The flush area cap
+# bounds resident mask memory; emission order does not matter (the final
+# sort+unique canonicalizes), so flushing early is always safe.
+
+_BATCH_FLUSH_AREA = 1 << 24  # max summed mask elements resident per flush
+
+_BATCH_VERIFY_JIT: dict[tuple[str, bool], Callable] = {}
+
+
+def _batched_tile_verify(metric: str, cross: bool) -> Callable:
+    """jit(vmap) of :func:`verify_tile` over a leading tile-batch axis, one
+    cached trace per (metric, cross); delta rides as a traced scalar so every
+    bucket shape shares the same wrapper."""
+    fn = _BATCH_VERIFY_JIT.get((metric, cross))
+    if fn is None:
+        def _one(xv, xw, vids, wids, wcells, cell_id, delta):
+            return verify_tile(
+                xv, xw, vids, wids, wcells, cell_id,
+                delta=delta, metric=metric, backend="numpy", cross=cross,
+            )
+
+        fn = jax.jit(jax.vmap(_one, in_axes=(0, 0, 0, 0, 0, 0, None)))
+        _BATCH_VERIFY_JIT[(metric, cross)] = fn
+    return fn
+
+
+def _flush_window_batch(
+    pending: list[tuple],
+    delta: float,
+    metric: str,
+    cross: bool,
+    stats: VerifyStats,
+    chunks: list[np.ndarray],
+    return_pairs: bool,
+) -> None:
+    """Dispatch the deferred window tiles: stack same-bucket tiles, run ONE
+    vmapped verify per bucket shape, emit hits with one batched nonzero.
+    Identical per-tile masks to the immediate path by construction (vmap of
+    the same :func:`verify_tile`)."""
+    fn = _batched_tile_verify(metric, cross)
+    groups: dict[tuple[int, int], list[int]] = {}
+    for i, t in enumerate(pending):
+        groups.setdefault((t[0].shape[0], t[1].shape[0]), []).append(i)
+    batches = []
+    for idxs in groups.values():
+        xv = np.stack([pending[i][0] for i in idxs])
+        xw = np.stack([pending[i][1] for i in idxs])
+        vids = np.stack([pending[i][2] for i in idxs])
+        wids = np.stack([pending[i][3] for i in idxs])
+        wcs = np.stack([pending[i][4] for i in idxs])
+        hs = np.fromiter((pending[i][5] for i in idxs), np.int64, len(idxs))
+        batches.append((vids, wids, fn(xv, xw, vids, wids, wcs, hs, float(delta))))
+    # ONE device->host sync for the whole flush, after every bucket-shape
+    # batch has been enqueued — not one blocking readback per batch (the
+    # prune_band idiom).
+    outs = jax.device_get([b[2] for b in batches])
+    for (vids, wids, _), out in zip(batches, outs):
+        bi, vi, wi = out.nonzero()
+        stats.n_hits += int(bi.size)
+        if return_pairs and bi.size:
+            # Padding lanes carry id -1 but can never be hits (pair
+            # validity is ANDed inside verify_tile), so the gathered ids
+            # are always real rows.
+            chunks.append(
+                np.stack([vids[bi, vi], wids[bi, wi]], axis=1).astype(np.int64)
+            )
+    pending.clear()
+
+
+def _estimate_emit_rate(coords: np.ndarray, delta: float) -> float:
+    """Survival-rate prior for compact-emission capacity sizing.
+
+    The cost model's pivot-pair bound-survival fraction over a deterministic
+    row subsample — the engine-side analogue of the distributed planner's
+    ``predicted_survival``. An OVERestimate of the true hit rate (the L∞
+    bound admits every hit), which is the safe direction for buffer sizing.
+    """
+    n = coords.shape[0]
+    k = min(n, _EMIT_SAMPLE)
+    if k < 2:
+        return 1.0
+    idx = np.linspace(0, n - 1, k).astype(np.int64)
+    rate = cost_model.estimate_survival_rate(coords[idx], delta)
+    return float(min(max(rate, 1.0 / (k * k)), 1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -393,8 +732,18 @@ def verify_cell_lists(
     in two-set mode). Per tile the engine first evaluates the cheap L∞
     lower-bound mask (O(tile·n) vs O(tile·m) exact work); a tile with zero
     surviving pairs skips exact evaluation entirely, the rest run the fused
-    filter+pairdist kernel. Output pairs are byte-identical to
-    ``prune="none"`` — the filter only ever removes non-hits.
+    filter+pairdist kernel. ``config.prune="window"`` keeps only the
+    host-side range/tile pruning (ordered windows + bounding-box skips,
+    module docstring) — no per-pair bound lanes, so the pruned dispatch is
+    strictly smaller than unpruned. Output pairs are byte-identical to
+    ``prune="none"`` in both modes — pruning only ever removes non-hits.
+
+    Compact emission: with ``config.emit="compact"`` each dispatched tile
+    returns the fused on-device pair buffer instead of the hit mask (module
+    docstring, *Emission paths*); the pair capacity is seeded from the cost
+    model's survival estimate when ``coords`` is given, grown on overflow,
+    with the mask path as bounded last-resort fallback. Output pairs are
+    byte-identical to ``emit="mask"``.
     """
     data_np = np.asarray(data, np.float32)
     cells_np = np.asarray(cells_of)
@@ -404,15 +753,40 @@ def verify_cell_lists(
     have_coords = coords is not None and (not cross or coords_w is not None)
     prune = resolve_prune(config.prune, metric, have_coords)
     delta_bound = None
-    if prune == "pivot":
+    if prune != "none":
         coords_np = np.asarray(coords, np.float32)
         coords_w_np = np.asarray(coords_w, np.float32) if cross else coords_np
         # One scale-aware fp guard band for the whole call — every sub-mask
-        # (pre-pass, fused kernel) shares it, so hits ⊆ candidates always.
+        # (window, bbox skip, pre-pass, fused kernel) shares it, so
+        # hits ⊆ candidates always.
         delta_bound = prune_band(
             delta, metric, data_np, data_w_np if cross else None
         )
-    stats = VerifyStats(prune=prune)
+    emit = resolve_emit(config.emit, metric)
+    # Which tiles actually carry the on-device pair buffer (module docstring,
+    # *Emission lowering*): the Pallas backend always; the jnp path only in
+    # "pivot" mode, where the buffer's counter row carries the per-pair
+    # survivor count the telemetry contract needs. Everything else lowers
+    # compact emission to mask dispatch + host pack — identical bytes.
+    buffered = emit == "compact" and (backend == "pallas" or prune == "pivot")
+    # Batched window dispatch (see _flush_window_batch): the jnp window path
+    # defers its (deliberately small) tiles and verifies same-bucket batches
+    # in one vmapped call each, so launch overhead cannot swallow the area
+    # the windows pruned. The Pallas path keeps per-tile dispatch — its
+    # block-skip already amortizes launches in-kernel.
+    batch_w = prune == "window" and backend != "pallas"
+    pending: list[tuple] = []
+    pending_area = 0
+    emit_rate = DEFAULT_EMIT_RATE
+    if buffered and coords is not None:
+        # Capacity prior: bound-survival fraction on a coordinate subsample,
+        # measured at delta_bound when the filter runs so prior and filter
+        # can never disagree on what survives.
+        emit_rate = _estimate_emit_rate(
+            np.asarray(coords, np.float32),
+            float(delta_bound if delta_bound is not None else delta),
+        )
+    stats = VerifyStats(prune=prune, emit=emit)
     chunks: list[np.ndarray] = []
 
     for h, (v_idx, w_idx) in enumerate(zip(v_lists, w_lists)):
@@ -423,29 +797,82 @@ def verify_cell_lists(
             continue
         stats.n_cells += 1
         stats.n_verifications += int(v_idx.size) * int(w_idx.size)
-        # W tiles are prepared once per cell (not per V tile): the copies are
-        # O(|W_h|·m) — linear in cell size, like the input rows themselves —
-        # while only the pair product is streamed tile-by-tile.
-        w_tiles = []
-        for w0 in range(0, w_idx.size, config.tile_w):
-            wt = w_idx[w0 : w0 + config.tile_w]
-            cap_w = bucket_size(wt.size, config.tile_w, config.min_bucket)
-            xw, wids = _pad_gather(data_w_np, wt, cap_w)
-            wc = np.full((cap_w,), -1, np.int64)
-            if not cross:  # W kernel cells only exist / matter for self-join
-                wc[: wt.size] = cells_np[wt]
-            pw = _pad_gather(coords_w_np, wt, cap_w)[0] if prune == "pivot" else None
-            w_tiles.append((wt, cap_w, xw, wids, wc, pw))
+        w_coord0 = None
+        if prune != "none":
+            # Window refinement (module docstring): order both sides by ONE
+            # mapped coordinate, so V tiles become coordinate bands and the
+            # binary search below slices each one's W range down to the
+            # ± delta_bound window. Any 1-Lipschitz coordinate is sound, so
+            # pick the one this cell's W rows spread widest on — the kernel
+            # grid already localizes the partitioned coordinates, leaving
+            # them little window to cut. Pure reordering — the emitted pair
+            # SET is unchanged; everything sliced off is a provable non-hit.
+            wc_all = coords_w_np[w_idx]
+            sort_dim = int((wc_all.max(axis=0) - wc_all.min(axis=0)).argmax())
+            v_idx = v_idx[np.argsort(coords_np[v_idx, sort_dim], kind="stable")]
+            word = np.argsort(wc_all[:, sort_dim], kind="stable")
+            w_idx = w_idx[word]
+            # One gather per cell into sort order; every tile below is a
+            # contiguous slice of these buffers (window = contiguous range).
+            w_coords_cell = wc_all[word]
+            w_coord0 = w_coords_cell[:, sort_dim]
+            w_data_cell = data_w_np[w_idx]
+            w_cells_cell = None if cross else cells_np[w_idx]
+            v_coords_cell = coords_np[v_idx]
+            v_data_cell = data_np[v_idx]
+            w_tiles = None  # sliced per V tile from the surviving window
+        else:
+            # W tiles are prepared once per cell (not per V tile): the copies
+            # are O(|W_h|·m) — linear in cell size, like the input rows
+            # themselves — while only the pair product streams tile-by-tile.
+            w_tiles = _prep_w_tiles(w_idx, data_w_np, cells_np, None, cross, config)
         for v0 in range(0, v_idx.size, config.tile_v):
             vt = v_idx[v0 : v0 + config.tile_v]
             cap_v = bucket_size(vt.size, config.tile_v, config.min_bucket)
-            xv, vids = _pad_gather(data_np, vt, cap_v)
-            pv = _pad_gather(coords_np, vt, cap_v)[0] if prune == "pivot" else None
-            for wt, cap_w, xw, wids, wc, pw in w_tiles:
+            pv = v_box = None
+            if prune != "none":
+                v_coords = v_coords_cell[v0 : v0 + config.tile_v]
+                v_box = (v_coords.min(axis=0), v_coords.max(axis=0))
+                xv, vids = _pad_rows(v_data_cell[v0 : v0 + config.tile_v], vt, cap_v)
+                if prune == "pivot":  # per-pair bound rides into the tile
+                    pv = _pad_rows(v_coords, vt, cap_v)[0]
+                vc = v_coords[:, sort_dim]
+                lo = int(np.searchsorted(w_coord0, vc.min() - delta_bound, "left"))
+                hi = int(np.searchsorted(w_coord0, vc.max() + delta_bound, "right"))
+                # W rows outside [lo, hi) differ from every V row in this
+                # tile by more than delta_bound on one 1-Lipschitz coordinate
+                # — already above the L∞ lower bound, pruned with zero
+                # gather and zero dispatch.
+                stats.n_pruned += int(vt.size) * int(w_idx.size - (hi - lo))
+                if lo == hi:
+                    continue
+                w_tiles = _prep_w_tiles_sorted(
+                    w_idx, w_data_cell, w_cells_cell, w_coords_cell,
+                    lo, hi, config, need_pw=prune == "pivot",
+                )
+            else:
+                xv, vids = _pad_gather(data_np, vt, cap_v)
+            for wt, cap_w, xw, wids, wc, pw, w_box in w_tiles:
                 n_valid = int(vt.size) * int(wt.size)
+                if v_box is not None and w_box is not None:
+                    # Bounding-box tile skip: interval arithmetic on the
+                    # mapped coordinates. The gap between the V and W boxes
+                    # lower-bounds every pair's L∞ bound, so a gap beyond
+                    # delta_bound means the whole tile is provable non-hits
+                    # — skipped before any dispatch, on every coordinate
+                    # (the window above only exploits the sort coordinate).
+                    gap = np.maximum(
+                        w_box[0] - v_box[1], v_box[0] - w_box[1]
+                    ).max()
+                    if gap > delta_bound:
+                        stats.n_pruned += n_valid
+                        stats.n_tiles_pruned += 1
+                        continue
                 premask = None
-                if prune == "pivot":
+                if emit == "mask" and prune == "pivot":
                     # Cheap pre-pass: O(tile·n) bound vs O(tile·m) exact.
+                    # Compact emission skips it — its filter runs fused
+                    # in-kernel and the survivor count comes back in-band.
                     cand_dev = _tile_candidates(
                         pv, pw, vids, wids, delta=float(delta),
                         delta_bound=delta_bound,
@@ -463,22 +890,93 @@ def verify_cell_lists(
                 stats.n_padded += cap_v * cap_w
                 stats.n_dispatched += n_valid
                 stats.bucket_shapes.add((cap_v, cap_w))
-                # spjoin-lint: allow[host-sync] -- tile result must land on host to be compacted into (i, j) pairs; one readback per dispatched tile by design
-                mask = np.asarray(
-                    _tile_verify(
-                        xv, xw, vids, wids, wc, h,
-                        delta=float(delta), metric=metric, backend=backend,
-                        cross=cross, pv=pv, pw=pw, prune=prune, premask=premask,
-                        delta_bound=delta_bound,
-                    )
-                )
-                if not mask.any():
+                if batch_w:
+                    pending.append((xv, xw, vids, wids, wc, h))
+                    pending_area += cap_v * cap_w
+                    if pending_area >= _BATCH_FLUSH_AREA:
+                        # Cap resident mask memory; early flushes are safe
+                        # (the final sort+unique canonicalizes pair order).
+                        _flush_window_batch(
+                            pending, delta, metric, cross,
+                            stats, chunks, return_pairs,
+                        )
+                        pending_area = 0
                     continue
-                vi, wi = np.nonzero(mask)
-                stats.n_hits += vi.size
-                if return_pairs:
-                    chunks.append(np.stack([vt[vi], wt[wi]], axis=1))
+                # "window" prunes entirely on the host (above); the tile
+                # itself runs the plain verify — no per-pair bound lanes.
+                tile_prune = prune if prune == "pivot" else "none"
+                tile_band = delta_bound if tile_prune == "pivot" else None
+                mode = "compact" if buffered else "mask"
+                cap_pairs = 0
+                if mode == "compact":
+                    cap_pairs = bucket_size(
+                        int(n_valid * min(emit_rate * EMIT_SLACK, 1.0)) + _EMIT_FLOOR,
+                        cap_v * cap_w,
+                    )
+                tile_counts = None
+                out = None
+                for attempt in range(_MAX_OVERFLOW_RETRIES + 2):
+                    if mode == "compact":
+                        out_dev = _tile_compact(
+                            xv, xw, vids, wids, wc, h,
+                            delta=float(delta), metric=metric, backend=backend,
+                            capacity=cap_pairs, cross=cross, pv=pv, pw=pw,
+                            prune=tile_prune, delta_bound=tile_band,
+                        )
+                    else:
+                        out_dev = _tile_verify(
+                            xv, xw, vids, wids, wc, h,
+                            delta=float(delta), metric=metric, backend=backend,
+                            cross=cross, pv=pv, pw=pw, prune=tile_prune,
+                            premask=premask, delta_bound=tile_band,
+                        )
+                    # spjoin-lint: allow[host-sync] -- tile result must land on host to become (i, j) pairs; ONE readback per dispatch, both emission paths
+                    out = np.asarray(out_dev)
+                    if mode != "compact":
+                        break
+                    tile_counts = (int(out[-1, 0]), int(out[-1, 1]))
+                    if tile_counts[0] <= cap_pairs:
+                        break
+                    # Overflow sentinel: count > capacity means the buffer
+                    # contents are unspecified, but count itself is the TRUE
+                    # total — the retry bucket is sized exactly in one step.
+                    # Bounded retries, then the mask path as last resort;
+                    # the emitted pair set is identical on every rung.
+                    stats.n_overflow_retries += 1
+                    if attempt >= _MAX_OVERFLOW_RETRIES:
+                        mode = "mask"
+                    else:
+                        cap_pairs = bucket_size(
+                            max(tile_counts[0], 2 * cap_pairs), cap_v * cap_w
+                        )
+                if mode == "compact":
+                    count, n_cand = tile_counts
+                    if prune == "pivot":
+                        stats.n_pruned += n_valid - n_cand
+                    # Grow the prior from observed hit rates so one hot tile
+                    # does not turn into a retry per tile downstream.
+                    emit_rate = max(emit_rate, count / max(n_valid, 1))
+                    stats.n_hits += count
+                    if return_pairs and count:
+                        chunks.append(out[:count].astype(np.int64))
+                else:
+                    if tile_counts is not None and prune == "pivot":
+                        # Overflow fallback: the mask path ran, but the last
+                        # compact dispatch already reported the survivor
+                        # count — pruning telemetry stays emission-invariant.
+                        stats.n_pruned += n_valid - tile_counts[1]
+                    mask = out
+                    if not mask.any():
+                        continue
+                    vi, wi = np.nonzero(mask)
+                    stats.n_hits += vi.size
+                    if return_pairs:
+                        chunks.append(np.stack([vt[vi], wt[wi]], axis=1))
 
+    if pending:
+        _flush_window_batch(
+            pending, delta, metric, cross, stats, chunks, return_pairs
+        )
     if chunks:
         # Each pair is emitted once (min-cell rule / unique kernel cell);
         # sort+unique is kept as a cheap invariant matching the seed

@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compact as _compact
 from repro.kernels import pairdist as _pairdist
 from repro.kernels import histogram as _histogram
 from repro.kernels import mapassign as _mapassign
@@ -228,6 +229,99 @@ def pairdist_mask_filtered(
     )
     # Padded rows/cols can false-positive exactly like pairdist_mask; slice.
     return out[:a, :b].astype(bool)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "delta", "metric", "capacity", "cross", "delta_bound",
+        "bv", "bw", "bm", "backend", "use_kernel",
+    ),
+)
+def verify_compact(
+    x: Array,
+    y: Array,
+    vids: Array,
+    wids: Array,
+    wcells: Array,
+    cell_id,
+    px: Array | None = None,
+    py: Array | None = None,
+    *,
+    delta: float,
+    metric: str,
+    capacity: int,
+    cross: bool = False,
+    delta_bound: float | None = None,
+    bv: int = 128,
+    bw: int = 128,
+    bm: int | None = None,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """Fused single-dispatch reduce step: (filter,) distance, threshold,
+    validity + min-cell de-dup, and on-device pair compaction.
+
+    ``vids`` / ``wids`` / ``wcells``: (a,) / (b,) int ids with padding = -1;
+    ``cell_id`` the verified cell (traced, not static — no recompile per
+    cell). With ``px``/``py`` (mapped coordinates) the pivot-filter bound is
+    fused in front of the exact distance (prunable metrics only, same rules
+    as :func:`pairdist_mask_filtered`).
+
+    Returns ``(pairs, count, n_cand)``: ``pairs`` (capacity, 2) int32 id
+    pairs padded with -1, ``count`` int32 the TRUE hit total (``count >
+    capacity`` == overflow -> the caller retries at the next capacity
+    bucket), ``n_cand`` int32 the pivot-filter survivor count (== valid pair
+    count when unfiltered). Pair ORDER is backend-dependent (row-major on
+    numpy, block-major on Pallas) — callers sort/unique, parity tests
+    order-normalize. Semantics oracle: ``ref.verify_compact``.
+    """
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if px is not None:
+        if not supports_prune(metric):
+            raise ValueError(
+                f"pivot filter is unsound for {metric!r} (needs the triangle "
+                f"inequality); prunable kernel metrics: {PRUNABLE_METRICS}"
+            )
+        if delta_bound is None:
+            delta_bound = ref.prune_delta(delta, metric)
+    if resolve_backend(backend, metric, use_kernel) == "numpy":
+        pairs, count, n_cand = ref.verify_compact(
+            x, y, vids, wids, wcells, cell_id, delta=delta, metric=metric,
+            capacity=capacity, cross=cross, px=px, py=py,
+            delta_bound=delta_bound,
+        )
+        return pairs, count, n_cand
+    a, b = x.shape[0], y.shape[0]
+    if a == 0 or b == 0:  # empty tile: nothing to grid over
+        return (
+            jnp.full((capacity, 2), -1, jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+    if bm is None:
+        bm = 128 if metric in _pairdist.MXU_METRICS else 16
+    xp, yp = _prep(x, y, metric, bv, bw, bm)
+    bm = min(bm, xp.shape[1])
+    # Row padding carries id/wcell = -1 so padded rows fail the validity
+    # mask — they can never be emitted or counted as candidates.
+    vp = _pad_const(vids.astype(jnp.int32).reshape(-1, 1), bv, 0, -1)
+    wp = _pad_const(wids.astype(jnp.int32).reshape(-1, 1), bw, 0, -1)
+    wcp = _pad_const(wcells.astype(jnp.int32).reshape(-1, 1), bw, 0, -1)
+    pxp = pyp = None
+    if px is not None:
+        # Pivot coords ride un-normalized (they are distances, not payload);
+        # zero row/column padding is exact for the L-inf max.
+        pxp = _pad_to(_pad_to(px.astype(jnp.float32), bv, 0), _pairdist.BP_CHUNK, 1)
+        pyp = _pad_to(_pad_to(py.astype(jnp.float32), bw, 0), _pairdist.BP_CHUNK, 1)
+    pairs, counts = _compact.verify_compact_blocked(
+        xp, yp, vp, wp, wcp, jnp.asarray(cell_id, jnp.int32).reshape(1, 1),
+        pxp, pyp, metric=metric, delta=float(delta), capacity=capacity,
+        delta_bound=None if delta_bound is None else float(delta_bound),
+        cross=cross, bv=bv, bw=bw, bm=bm, interpret=_interpret(),
+    )
+    return pairs, counts[0, 0], counts[0, 1]
 
 
 @functools.partial(

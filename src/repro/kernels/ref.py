@@ -138,6 +138,112 @@ def pairdist_count(x: Array, y: Array, delta: float, metric: str = "l2") -> Arra
     return pairdist_mask(x, y, delta, metric).sum(-1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Fused reduce phase: emission semantics + on-device pair compaction
+# ---------------------------------------------------------------------------
+
+
+def emit_mask(
+    vids: Array, wids: Array, wcells: Array, cell_id, cross: bool = False
+) -> Array:
+    """(a, b) bool — pairs this cell is allowed to emit (pre-distance).
+
+    Padding validity (id = -1 rows are never emitted) plus the min-cell
+    de-dup rule of the reduce phase: a hit (v, w) with kernel cells
+    (g = ``cell_id``, h = ``wcells[j]``) is emitted by cell min(g, h) only;
+    within one cell both orders are present, so keep id_v < id_w. R×S mode
+    (``cross=True``): the sets are disjoint and each R row lives in exactly
+    one kernel cell, so validity alone suffices. Single owner of the rule —
+    ``core.verify.apply_dedup`` and the fused compaction kernel both
+    delegate here.
+    """
+    valid = (vids[:, None] >= 0) & (wids[None, :] >= 0)
+    if cross:
+        return valid
+    return valid & (
+        (wcells[None, :] > cell_id)
+        | ((wcells[None, :] == cell_id) & (vids[:, None] < wids[None, :]))
+    )
+
+
+def compact_mask(
+    mask: Array, vids: Array, wids: Array, capacity: int
+) -> tuple[Array, Array]:
+    """Prefix-sum compaction of a hit mask into a fixed-capacity pair buffer.
+
+    Returns ``(pairs, count)``: ``pairs`` is (capacity, 2) int32 holding
+    ``(vids[i], wids[j])`` for the True cells of ``mask`` in row-major
+    (``np.nonzero``) order, padded with -1; ``count`` is int32 and equals the
+    TRUE total number of hits — ``count > capacity`` signals overflow, in
+    which case the retained prefix is the first ``capacity`` hits but callers
+    must treat the buffer as unspecified and retry at a larger capacity (the
+    Pallas kernel fills it in block-major, not row-major, order).
+
+    Scatter-free formulation (the jnp/XLA fast path): the k-th hit's flat
+    position is the first index where the inclusive prefix sum of the
+    flattened mask reaches k — a ``searchsorted`` over ``capacity`` query
+    points inverts the cumsum without a 1-element-scatter per hit.
+    """
+    a, b = mask.shape
+    if a == 0 or b == 0:
+        return (
+            jnp.full((capacity, 2), -1, jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+    incl = jnp.cumsum(mask.astype(jnp.int32).reshape(-1))
+    count = incl[-1].astype(jnp.int32)
+    q = jnp.arange(1, capacity + 1, dtype=incl.dtype)
+    pos = jnp.minimum(jnp.searchsorted(incl, q, side="left"), a * b - 1)
+    ok = q <= count
+    pv = jnp.where(ok, vids[pos // b].astype(jnp.int32), -1)
+    pw = jnp.where(ok, wids[pos % b].astype(jnp.int32), -1)
+    return jnp.stack([pv, pw], axis=1), count
+
+
+def verify_compact(
+    x: Array,
+    y: Array,
+    vids: Array,
+    wids: Array,
+    wcells: Array,
+    cell_id,
+    *,
+    delta: float,
+    metric: str,
+    capacity: int,
+    cross: bool = False,
+    px: Array | None = None,
+    py: Array | None = None,
+    delta_bound: float | None = None,
+) -> tuple[Array, Array, Array]:
+    """Fused verify + on-device pair compaction, the obvious-form oracle.
+
+    One tile's whole reduce step: (optional) pivot-filter bound, exact
+    pairwise distance, ``<= delta`` threshold, validity + min-cell de-dup,
+    then prefix-sum compaction of the surviving hits into a (capacity, 2)
+    int32 id-pair buffer. Returns ``(pairs, count, n_cand)``:
+
+      * ``pairs`` / ``count`` as :func:`compact_mask` (count is the TRUE hit
+        total — ``count > capacity`` means overflow, retry bigger);
+      * ``n_cand`` int32: valid pairs surviving the pivot filter (== the
+        valid pair count when ``px`` is None) — same quantity the streaming
+        engine's candidate pre-pass reports, so prune telemetry is identical
+        across emission modes.
+    """
+    valid = (vids[:, None] >= 0) & (wids[None, :] >= 0)
+    hits = pairdist_mask(x, y, delta, metric)
+    if px is not None:
+        assert py is not None
+        bound = bound_mask(px, py, delta, delta_bound)
+        n_cand = (bound & valid).sum().astype(jnp.int32)
+        hits = hits & bound
+    else:
+        n_cand = valid.sum().astype(jnp.int32)
+    hits = hits & emit_mask(vids, wids, wcells, cell_id, cross)
+    pairs, count = compact_mask(hits, vids, wids, capacity)
+    return pairs, count, n_cand
+
+
 MEMBER_WORD = 32  # whole-membership bits per packed uint32 word
 BIG = 3.0e38  # finite ±inf stand-in for box edges (fp32-representable);
 #   core.partition aliases this — one owner for the sentinel

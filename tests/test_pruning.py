@@ -226,8 +226,11 @@ def test_filtered_kernel_matches_oracle(metric, backend, rng):
 
 
 def test_whole_tile_skip_counts(rng):
-    """Two far-apart clumps sharing a cell: cross-clump tiles are fully
-    pruned and skipped outright (no exact dispatch, no occupancy entry)."""
+    """Two far-apart clumps sharing a cell: cross-clump work is eliminated
+    BEFORE any exact dispatch. The ordered-window refinement slices the far
+    clump out of every V tile's W range, so the cross-clump tiles are never
+    even formed (n_tiles counts same-clump tiles only) and their pairs land
+    in n_pruned."""
     a = rng.normal(loc=0.0, size=(40, 4)).astype(np.float32)
     b = rng.normal(loc=500.0, size=(40, 4)).astype(np.float32)
     data = np.concatenate([a, b])
@@ -241,7 +244,11 @@ def test_whole_tile_skip_counts(rng):
     base, _ = verify.verify_pairs(data, cells, member, 2.0, "l1",
                                   config=dataclasses.replace(cfg, prune="none"))
     assert pruned.tobytes() == base.tobytes()
-    assert stats.n_tiles_pruned >= 2  # the two cross-clump tiles
+    # Only the two same-clump tiles are dispatched; both cross-clump
+    # products (2 * 40 * 40 pairs) are pruned without a tile.
+    assert stats.n_tiles == 2
+    assert stats.n_dispatched == 2 * 40 * 40
+    assert stats.n_pruned >= 2 * 40 * 40
     assert stats.n_dispatched < stats.n_verifications
     assert 0.0 < stats.occupancy <= 1.0
 

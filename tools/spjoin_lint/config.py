@@ -49,7 +49,8 @@ LINT_ROOTS = ("repro/core/", "repro/kernels/")
 # Qualnames are dotted nesting without <locals> ("Class.method", "outer.inner").
 STREAM_SCOPES: dict[str, frozenset[str]] = {
     "repro/core/verify.py": frozenset(
-        {"verify_cell_lists", "verify_pairs", "prune_band"}
+        {"verify_cell_lists", "verify_pairs", "prune_band",
+         "_flush_window_batch"}
     ),
     "repro/core/index.py": frozenset(
         {
@@ -104,7 +105,7 @@ F64_MODULE_WIDE = ("repro/kernels/",)
 # the dispatch layer and the jnp oracle. Raw kernel modules and pallas
 # itself are off limits outside kernels/ (layering: core -> ops -> pallas).
 BLESSED_KERNEL_IMPORTS = frozenset({"ops", "ref"})
-RAW_KERNEL_MODULES = frozenset({"pairdist", "mapassign", "histogram"})
+RAW_KERNEL_MODULES = frozenset({"pairdist", "mapassign", "histogram", "compact"})
 
 # collective-site: communication primitives and where each is blessed.
 # Sites are (file suffix, top-level qualname) — closures inside the listed

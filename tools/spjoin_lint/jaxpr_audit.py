@@ -289,6 +289,54 @@ def repo_entries() -> list[dict]:
             )
         entries.append(e)
 
+    # ---- the fused reduce tile: verify + on-device pair compaction -------
+    # Contract: the compacted pair buffer's out-shape IS the capacity
+    # bucket (static — assertion (c) rejects anything data-dependent),
+    # zero f64 casts, zero collectives (compacted pairs ride the existing
+    # exchange; the kernel itself never communicates).
+    entries.append(trace_entry(
+        "ops.verify_compact",
+        functools.partial(
+            kops.verify_compact, delta=1.0, metric="l1", capacity=16,
+            cross=True, backend="numpy",
+        ),
+        (x, y, jnp.zeros((8,), jnp.int32), jnp.zeros((6,), jnp.int32),
+         jnp.zeros((6,), jnp.int32), jnp.zeros((), jnp.int32)),
+    ))
+    e = entries[-1]
+    if not e["errors"] and e["out_shapes"] != [[16, 2], [], []]:
+        e["errors"].append(
+            f"ops.verify_compact out shapes {e['out_shapes']} are not the "
+            f"capacity-bucket contract [[16, 2], [], []] "
+            f"(pairs buffer, count, n_cand)"
+        )
+
+    def ctile(cv, cw, cap):
+        def f(xv, xw, vids, wids, wcells):
+            return verify_lib.verify_tile_compact(
+                xv, xw, vids, wids, wcells, 0,
+                delta=1.0, metric="l1", backend="numpy", capacity=cap,
+            )
+        args = (
+            jnp.zeros((cv, 4), f32), jnp.zeros((cw, 4), f32),
+            jnp.zeros((cv,), jnp.int32), jnp.zeros((cw,), jnp.int32),
+            jnp.zeros((cw,), jnp.int32),
+        )
+        return trace_entry(f"verify.verify_tile_compact[{cv}x{cw}x{cap}]", f, args)
+
+    # Pair capacities ride the same quarter-pow2 ladder as the tile sides;
+    # the engine tile's out-shape is (capacity + 1, 2) — buffer plus the
+    # in-band [count, n_cand] row.
+    for cv, cw, cap in [(fam_v[0], fam_w[0], 16), (fam_v[-1], fam_w[-1], 256)]:
+        e = ctile(cv, cw, cap)
+        if not e["errors"] and e["out_shapes"] != [[cap + 1, 2]]:
+            e["errors"].append(
+                f"verify_tile_compact({cv},{cw},{cap}) output shape "
+                f"{e['out_shapes']} is not the capacity bucket "
+                f"[[{cap + 1}, 2]]"
+            )
+        entries.append(e)
+
     # ---- the distributed stages (1-device mesh; jaxpr structure is what
     # we pin — the collective eqns are present regardless of mesh size) ----
     mesh = Mesh(np.array(jax.devices("cpu")[:1]), ("data",))
